@@ -1,0 +1,53 @@
+"""Microbenchmark of the OTA receive combine: Pallas kernel (interpret
+on CPU — correctness/latency proxy only; compiled path targets TPU) vs
+the jnp oracle, across paper-relevant shapes."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import mf_combine
+
+
+def _bench(f, *args, n=5) -> float:
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else None
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(n):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n
+
+
+def main(quick: bool = True) -> List[str]:
+    lines = []
+    shapes = [(20, 100, 3925), (4, 100, 3925)]  # MNIST: C*M users, IS hop
+    if not quick:
+        shapes.append((20, 100, 153749))        # CIFAR model size
+    rng = np.random.default_rng(0)
+    for (U, K, N) in shapes:
+        h = jnp.asarray((rng.standard_normal((U, K, N))
+                         + 1j * rng.standard_normal((U, K, N))
+                         ).astype(np.complex64))
+        t = jnp.asarray((rng.standard_normal((U, N))
+                         + 1j * rng.standard_normal((U, N))
+                         ).astype(np.complex64))
+        z = jnp.asarray((rng.standard_normal((K, N))
+                         + 1j * rng.standard_normal((K, N))
+                         ).astype(np.complex64))
+        f_ref = jax.jit(lambda a, b, c: mf_combine(a, b, c, use_kernel=False))
+        dt = _bench(f_ref, h, t, z, n=3)
+        gflops = 8.0 * U * K * N / dt / 1e9  # ~8 flops per (u,k,n) cmac
+        lines.append(f"kernel/ref_U{U}_K{K}_N{N},{1e6 * dt:.1f},"
+                     f"gflops={gflops:.2f}")
+    return lines
+
+
+if __name__ == "__main__":
+    for ln in main():
+        print(ln)

@@ -1,0 +1,118 @@
+"""Regenerate the EXPERIMENTS.md dry-run/roofline tables from the
+dry-run JSONL artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+from benchmarks.roofline import load_records, model_flops
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def dryrun_table(single, multi) -> str:
+    by_key = {}
+    for r in single + multi:
+        if r.get("ok"):
+            by_key.setdefault((r["arch"], r["shape"]), {})[r["mesh"]] = r
+    lines = [
+        "| arch | shape | 16×16 | mem/dev | compile | 2×16×16 | mem/dev | compile |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (a, s), meshes in sorted(by_key.items()):
+        row = [a, s]
+        for m in ("16x16", "2x16x16"):
+            r = meshes.get(m)
+            if r:
+                gb = r["memory"].get("total_hbm_bytes", 0) / 2 ** 30
+                row += ["OK", f"{gb:.1f} GiB", f"{r.get('t_compile_s', 0):.0f}s"]
+            else:
+                row += ["—", "—", "—"]
+        lines.append("| " + " | ".join(row) + " |")
+    n_ok = sum(1 for v in by_key.values() if "16x16" in v)
+    n_ok2 = sum(1 for v in by_key.values() if "2x16x16" in v)
+    lines.append("")
+    lines.append(f"**{n_ok}/40 single-pod and {n_ok2}/40 multi-pod pairs "
+                 "lower + compile.** Memory figures are per-device "
+                 "(arguments + outputs + temporaries) from "
+                 "`compiled.memory_analysis()`; the structural path holds "
+                 "params replicated over the data axes (see §Perf H3 for "
+                 "the FSDP-fused alternative that makes the giant MoEs "
+                 "fit).")
+    return "\n".join(lines)
+
+
+def roofline_table(single) -> str:
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | dominant | MODEL/HLO flops | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    NOTES = {
+        ("dense", "train"): "flash/score-tiling + head sharding (see §Perf H1)",
+        ("dense", "prefill"): "score-tile traffic: bf16/online softmax",
+        ("dense", "decode"): "KV-cache reads dominate: quantized/smaller cache",
+        ("moe", "train"): "FSDP + bf16 buffers (§Perf H3)",
+        ("moe", "prefill"): "EP dispatch collectives: capacity/locality (§Perf H2)",
+        ("moe", "decode"): "cache + expert weights resident: FSDP/offload",
+        ("ssm", "train"): "chunk-tile traffic: fuse SSD chunk scan",
+        ("ssm", "prefill"): "conv+scan traffic: fuse into one pass",
+        ("ssm", "decode"): "state update is tiny: batch more requests",
+        ("hybrid", "train"): "as ssm + shared-attn score tiles",
+        ("vlm", "train"): "7k-dim activations: bf16 + sequence sharding",
+        ("encdec", "train"): "cross-attn over 1k frames: fuse/bf16",
+    }
+    for r in sorted(single, key=lambda r: (r["arch"], r["shape"])):
+        if not r.get("ok"):
+            continue
+        ro = r["roofline"]
+        mf = model_flops(r["arch"], r["shape"])
+        ratio = mf / ro["flops"] if ro["flops"] else float("inf")
+        from repro.configs import get_config, INPUT_SHAPES
+        fam = get_config(r["arch"]).family
+        kind = INPUT_SHAPES[r["shape"]].kind
+        note = NOTES.get((fam, kind), NOTES.get(("dense", kind), ""))
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['t_compute_s']:.2e} s "
+            f"| {ro['t_memory_s']:.2e} s | {ro['t_collective_s']:.2e} s "
+            f"| **{ro['dominant']}** | {min(ratio, 99):.2f} | {note} |")
+    lines.append("")
+    lines.append(
+        "Terms from the trip-count-aware HLO cost model "
+        "(`launch/hlo_cost.py`; XLA's own cost_analysis visits scan "
+        "bodies once — validated against unrolled lowerings in "
+        "tests/test_hlo_cost.py). The memory term uses XLA's "
+        "operand+result-bytes-per-op convention: an *upper bound* on HBM "
+        "traffic that ignores VMEM/fusion locality, so it systematically "
+        "dominates; treat cross-config ratios, not absolute seconds. "
+        "MODEL/HLO < 1 exposes replication + remat waste (e.g. "
+        "qwen2-1.5b: 12 heads can't shard over model=16 → attention "
+        "compute replicated 16× → ratio 0.13 — fixed in §Perf H1). "
+        "SSM decode ratios >1 are a limitation of the 6·N·D proxy for "
+        "recurrent state updates, not measured waste.")
+    return "\n".join(lines)
+
+
+def main():
+    single = load_records(os.path.join(ROOT, "results",
+                                       "dryrun_baseline.jsonl"))
+    multi = load_records(os.path.join(ROOT, "results",
+                                      "dryrun_multipod.jsonl"))
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    text = re.sub(r"<!-- DRYRUN_TABLE -->.*?(?=\n## |\Z)",
+                  "<!-- DRYRUN_TABLE -->\n" + dryrun_table(single, multi)
+                  + "\n\n", text, flags=re.S)
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n## |\Z)",
+                  "<!-- ROOFLINE_TABLE -->\n" + roofline_table(single)
+                  + "\n\n", text, flags=re.S)
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md tables regenerated "
+          f"({len(single)} single-pod, {len(multi)} multi-pod records)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Roofline report over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads results/dryrun_baseline.jsonl (written by
+``python -m repro.launch.dryrun --json ...`` — a separate process, since
+the dry-run needs 512 host devices and benchmarks must see 1) and prints
+the three-term roofline per (arch x shape) with the dominant term and
+the MODEL_FLOPS / HLO_FLOPs usefulness ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import INPUT_SHAPES, get_config
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def model_flops(arch: str, shape_name: str, n_chips: int = 256) -> float:
+    """Per-device useful model FLOPs: 6 N D (dense train) / 2 N D
+    (forward-only), N = active params, D = tokens processed."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    d, L = cfg.d_model, cfg.n_layers
+    # active params per layer
+    if cfg.n_experts:
+        ffn = 3 * d * cfg.d_ff_expert * cfg.top_k
+        if cfg.dense_residual_ff:
+            ffn += 3 * d * cfg.dense_residual_ff
+    elif cfg.family in ("ssm",):
+        din = cfg.ssm_expand * d
+        ffn = d * (2 * din + 2 * cfg.ssm_state +
+                   din // max(cfg.ssm_head_dim, 1)) + din * d
+    else:
+        ffn = 3 * d * cfg.d_ff
+    attn = 0
+    if cfg.n_heads:
+        attn = 2 * d * cfg.n_heads * cfg.head_dim + 2 * d * cfg.n_kv_heads * cfg.head_dim
+    if cfg.family == "hybrid":
+        din = cfg.ssm_expand * d
+        ssm = d * (2 * din + 2 * cfg.ssm_state) + din * d
+        n_attn = max(1, cfg.n_layers // max(cfg.shared_attn_every, 1))
+        active = cfg.n_layers * ssm + n_attn * (attn + 3 * d * cfg.d_ff)
+    else:
+        active = L * (ffn + attn)
+    active += 2 * cfg.vocab * d  # embed + head
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 2
+    else:
+        tokens = shape.global_batch  # one token per request
+        mult = 2
+    return mult * active * tokens / n_chips
+
+
+def load_records(path: str) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    # keep the LAST record per (arch, shape, mesh, path)
+    dedup = {}
+    for r in out:
+        dedup[(r["arch"], r["shape"], r.get("mesh"), r.get("path"))] = r
+    return list(dedup.values())
+
+
+def table(records: List[dict], mesh: str = "16x16") -> List[str]:
+    lines = []
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != mesh or not r.get("ok"):
+            continue
+        roof = r["roofline"]
+        mf = model_flops(r["arch"], r["shape"])
+        ratio = mf / roof["flops"] if roof["flops"] else 0.0
+        gb = r.get("memory", {}).get("total_hbm_bytes", 0) / 2 ** 30
+        lines.append(
+            f"roofline/{r['arch']}/{r['shape']},0.0,"
+            f"t_comp={roof['t_compute_s']:.2e};t_mem={roof['t_memory_s']:.2e};"
+            f"t_coll={roof['t_collective_s']:.2e};dom={roof['dominant']};"
+            f"useful_ratio={ratio:.2f};mem_GiB={gb:.1f}")
+    return lines
+
+
+def main(quick: bool = True) -> List[str]:
+    recs = load_records(os.path.join(RESULTS, "dryrun_baseline.jsonl"))
+    if not recs:
+        return ["roofline/missing,0.0,run `python -m repro.launch.dryrun "
+                "--json results/dryrun_baseline.jsonl` first"]
+    return table(recs)
+
+
+if __name__ == "__main__":
+    for ln in main():
+        print(ln)

@@ -1,0 +1,52 @@
+"""Benchmark driver: one suite per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints ``name,us_per_call,derived`` CSV lines.  --full runs the paper's
+full IT=400 protocol (hours on 1 CPU core); default is a reduced but
+ordering-preserving configuration.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (fig2_mnist, fig3_cifar, fig4_bound, kernel_bench,
+                            power_table, roofline)
+    suites = {
+        "fig4_bound": fig4_bound.main,
+        "fig2_mnist": fig2_mnist.main,
+        "fig3_cifar": fig3_cifar.main,
+        "power_table": power_table.main,
+        "kernel_bench": kernel_bench.main,
+        "roofline": roofline.main,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            for line in fn(quick=quick):
+                print(line)
+                sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}")
+        print(f"{name}/__suite__,{1e6 * (time.time() - t0):.0f},done")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Federated LM pre-training with the production W-HFL runtime (Mode B).
+
+Trains a small GQA transformer (~8M params by default) on the synthetic
+Markov corpus using `build_train_step` — the same shard_map two-hop OTA
+aggregation path the 512-chip dry-run lowers — on a host-device mesh.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python examples/lm_federated.py --steps 200
+
+(The XLA_FLAGS prefix gives this CPU host 8 fake devices: 2 clusters x
+2 users x 2-way model parallel.)
+"""
+import argparse
+import os
+import sys
+import time
+
+if __name__ == "__main__" and "--no-fake-devices" not in sys.argv:
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs.base import ArchConfig, InputShape
+from repro.core.dist import OTADistConfig, uniform_geom
+from repro.data import lm_corpus
+from repro.launch.train import TrainConfig, build_train_step
+
+
+def batches(tokens, B, L, seed=0):
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - L - 1
+    while True:
+        idx = rng.integers(0, n, B)
+        x = np.stack([tokens[i:i + L] for i in idx])
+        y = np.stack([tokens[i + 1:i + L + 1] for i in idx])
+        yield {"tokens": jnp.asarray(x), "labels": jnp.asarray(y)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--tau", type=int, default=1)
+    ap.add_argument("--I", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=8192)
+    ap.add_argument("--ota", default="equivalent",
+                    choices=["equivalent", "ideal"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--no-fake-devices", action="store_true")
+    args = ap.parse_args()
+
+    n_dev = jax.device_count()
+    n_model = 2 if n_dev % 2 == 0 and n_dev > 1 else 1
+    n_data = n_dev // n_model
+    mesh = jax.make_mesh((n_data, n_model), ("data", "model"))
+    M = 2 if n_data % 2 == 0 else 1
+    print(f"devices={n_dev} mesh=({n_data},{n_model}) users/cluster={M}")
+
+    cfg = ArchConfig(
+        name="lm-small", family="dense", source="example",
+        n_layers=args.layers, d_model=args.d_model, n_heads=4, n_kv_heads=2,
+        head_dim=args.d_model // 4, d_ff=4 * args.d_model,
+        vocab=args.vocab, q_block=128, remat=False)
+    shape = InputShape("example", args.seq, args.batch, "train")
+    # quiet radio for the demo: 1024 rx antennas, low noise floor (the
+    # channel-noise/gradient SNR trade is explored in tests/benchmarks)
+    geom = uniform_geom(C=max(n_data // M, 1), M=M, K=1024, K_ps=1024,
+                        sigma_z2=1e-4)
+    tcfg = TrainConfig(tau=args.tau, I=args.I, users_per_cluster=M,
+                       eta_local=1.0 if args.tau * args.I == 1 else 5e-3,
+                       outer="adamw" if args.tau * args.I == 1 else "add",
+                       outer_lr=3e-4, geom=geom,
+                       ota=OTADistConfig(mode=args.ota))
+    step, init_fn, shardings_fn, rmesh = build_train_step(
+        cfg, shape, mesh, tcfg)
+    state, axes = init_fn(jax.random.PRNGKey(0))
+    sh = shardings_fn(axes)
+    jstep = jax.jit(step, in_shardings=(sh["state"], sh["batch"], sh["key"]),
+                    out_shardings=(sh["state"], sh["metrics"]),
+                    donate_argnums=(0,))
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree.leaves(state["params"]))
+    print(f"params: {n_params / 1e6:.1f}M")
+
+    toks = lm_corpus(0, n_tokens=500_000, vocab=args.vocab)
+    it = batches(toks, args.batch, args.seq)
+    t0 = time.time()
+    for i in range(args.steps):
+        state, m = jstep(state, next(it), jax.random.PRNGKey(i))
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"step {i:4d} loss={float(m['loss']):.4f} "
+                  f"edge_power={float(m['edge_power']):.2e} "
+                  f"({(time.time() - t0) / (i + 1):.2f}s/step)")
+        if args.ckpt_dir and (i + 1) % 100 == 0:
+            ckpt.save_step(args.ckpt_dir, i + 1,
+                           jax.device_get(state["params"]))
+    print(f"done: {args.steps} steps in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

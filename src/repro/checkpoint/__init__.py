@@ -1,0 +1,3 @@
+from repro.checkpoint.store import latest, load, save, save_step
+
+__all__ = ["save", "load", "latest", "save_step"]

@@ -1,0 +1,77 @@
+"""Pytree checkpointing without external deps.
+
+Arrays are stored in a single .npz; the tree structure (dict/list/tuple
+nesting + leaf dtypes) is stored as JSON alongside.  Handles the full
+trainer state (params, optimizer moments, step counters, RNG keys).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    treedef = jax.tree.structure(tree)
+    flat = {}
+    for i, (path, leaf) in enumerate(leaves_with_paths):
+        flat[f"leaf_{i}"] = np.asarray(leaf)
+    return flat, treedef
+
+
+def save(path: str, tree) -> None:
+    """Atomic save of a pytree of arrays to `path` (.npz)."""
+    flat, treedef = _flatten_with_paths(tree)
+    meta = {"treedef": str(treedef), "n_leaves": len(flat)}
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, __meta__=json.dumps(meta), **flat)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load(path: str, like):
+    """Load into the structure of `like` (a template pytree)."""
+    with np.load(path, allow_pickle=False) as z:
+        leaves = [z[f"leaf_{i}"] for i in range(len(z.files) - 1)]
+    template_leaves, treedef = jax.tree.flatten(like)
+    if len(leaves) != len(template_leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, template has "
+            f"{len(template_leaves)}")
+    out = [np.asarray(l).astype(t.dtype) if hasattr(t, "dtype") else l
+           for l, t in zip(leaves, template_leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def latest(dirpath: str, prefix: str = "ckpt_") -> str | None:
+    if not os.path.isdir(dirpath):
+        return None
+    cands = [f for f in os.listdir(dirpath)
+             if f.startswith(prefix) and f.endswith(".npz")]
+    if not cands:
+        return None
+    return os.path.join(
+        dirpath, max(cands, key=lambda f: int(f[len(prefix):-4])))
+
+
+def save_step(dirpath: str, step: int, tree, keep: int = 3) -> str:
+    """Save `ckpt_<step>.npz` and prune old checkpoints."""
+    path = os.path.join(dirpath, f"ckpt_{step}.npz")
+    save(path, tree)
+    cands = sorted([f for f in os.listdir(dirpath)
+                    if f.startswith("ckpt_") and f.endswith(".npz")],
+                   key=lambda f: int(f[5:-4]))
+    for f in cands[:-keep]:
+        os.unlink(os.path.join(dirpath, f))
+    return path

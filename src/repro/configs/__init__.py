@@ -1,0 +1,13 @@
+from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES, register, get_config, list_configs
+
+# import for registration side-effects
+from repro.configs import archs as _archs  # noqa: F401
+
+__all__ = [
+    "ArchConfig",
+    "InputShape",
+    "INPUT_SHAPES",
+    "register",
+    "get_config",
+    "list_configs",
+]

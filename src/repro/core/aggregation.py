@@ -1,0 +1,70 @@
+"""Pytree <-> flat-vector plumbing and power accounting for OTA hops.
+
+The OTA channel operates on flat R^{2N} vectors (eq. 7 packing).  These
+helpers ravel arbitrary model pytrees into padded even-length vectors
+(vmap-safe, shapes fixed at trace time) and account transmit power the
+way the paper reports it (average per-symbol power at the edge).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class FlatSpec:
+    shapes: Tuple[Tuple[int, ...], ...]
+    sizes: Tuple[int, ...]
+    treedef: object
+    dtypes: Tuple[object, ...]
+    two_n: int  # padded to even
+
+    @property
+    def n_params(self) -> int:
+        return int(sum(self.sizes))
+
+
+def make_flat_spec(tree) -> FlatSpec:
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+    total = int(sum(sizes))
+    two_n = total + (total % 2)
+    return FlatSpec(shapes=shapes, sizes=sizes, treedef=treedef,
+                    dtypes=tuple(l.dtype for l in leaves), two_n=two_n)
+
+
+def flatten(spec: FlatSpec, tree) -> jax.Array:
+    """tree -> [2N] float32 (zero-padded to even length). vmap-safe."""
+    leaves = jax.tree.leaves(tree)
+    flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in leaves])
+    pad = spec.two_n - flat.shape[-1]
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    return flat
+
+
+def unflatten(spec: FlatSpec, vec: jax.Array):
+    """[2N] -> tree (padding dropped)."""
+    out: List[jax.Array] = []
+    off = 0
+    for shape, size, dt in zip(spec.shapes, spec.sizes, spec.dtypes):
+        out.append(vec[off:off + size].reshape(shape).astype(dt))
+        off += size
+    return jax.tree.unflatten(spec.treedef, out)
+
+
+def symbol_power(flat: jax.Array, P) -> jax.Array:
+    """Average transmit power per complex symbol for one transmission of
+    the packed vector `flat` ([..., 2N]) with power multiplier P:
+    P^2 * E_n |Delta^cx_n|^2 = P^2 * sum(flat^2)/N, averaged over
+    leading axes (users)."""
+    two_n = flat.shape[-1]
+    n = two_n // 2
+    per_tx = (P ** 2) * jnp.sum(jnp.square(flat), axis=-1) / n
+    return jnp.mean(per_tx)

@@ -1,0 +1,294 @@
+"""Over-the-air (OTA) aggregation channels (paper §III).
+
+Model deltas in R^{2N} are packed into C^N (eq. 7/14), transmitted
+uncoded and simultaneously over a Rayleigh-fading MAC with path loss,
+received over K antennas, matched-filter combined with the *sum* of the
+own-cluster channels (eq. 9/16), and rescaled (eq. 12/17).
+
+Two modes:
+- "faithful": materializes per-(user, antenna, symbol) channels and
+  folds over antennas — the paper's model, exactly (including intra- and
+  inter-cluster interference, eqs. 8/11 and 15/19).
+- "equivalent": the beyond-paper production mode — applies the
+  closed-form first/second moments of eq. (11)/(19) (signal-gain jitter
+  ~ Var[(1/K)Σ_k|h|^2], interference and thermal-noise variances from
+  the Lemma 7–14 calculus) as per-entry Gaussian perturbations.  ~K x
+  cheaper; distributionally matched to second order.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import Topology
+
+
+@dataclass(frozen=True)
+class OTAConfig:
+    mode: str = "faithful"   # "faithful" | "equivalent" | "ideal"
+    interference: bool = True
+    antenna_chunk: int = 8   # antennas folded per scan step (faithful mode)
+    use_kernel: bool = False  # use the Pallas ota_combine kernel
+
+
+def _chunk(K: int, ck: int) -> int:
+    """Largest divisor of K that is <= ck."""
+    ck = max(1, min(ck, K))
+    while K % ck:
+        ck -= 1
+    return ck
+
+
+# ---------------------------------------------------------------------------
+# packing R^{2N} <-> C^N (eq. 7)
+# ---------------------------------------------------------------------------
+
+def pack_cx(x: jax.Array) -> jax.Array:
+    """[..., 2N] real -> [..., N] complex64 (first half real, second imag)."""
+    n = x.shape[-1] // 2
+    return jax.lax.complex(x[..., :n].astype(jnp.float32),
+                           x[..., n:].astype(jnp.float32))
+
+
+def unpack_cx(y: jax.Array) -> jax.Array:
+    return jnp.concatenate([jnp.real(y), jnp.imag(y)], axis=-1)
+
+
+def _cn(key, shape, var: float) -> jax.Array:
+    """Circularly-symmetric complex normal CN(0, var)."""
+    kr, ki = jax.random.split(key)
+    s = np.sqrt(var / 2.0)
+    return jax.lax.complex(s * jax.random.normal(kr, shape, jnp.float32),
+                           s * jax.random.normal(ki, shape, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Cluster aggregation hop (MUs -> ISs), eq. (8)-(12)
+# ---------------------------------------------------------------------------
+
+def cluster_ota(key, deltas: jax.Array, topo: Topology, P_t,
+                cfg: OTAConfig = OTAConfig()) -> jax.Array:
+    """deltas: [C, M, 2N] (model differences of every MU).
+    Returns Delta_hat_IS: [C, 2N] — each IS's estimate of its cluster mean.
+    """
+    if cfg.mode == "ideal":
+        return deltas.mean(axis=1)
+    if cfg.mode == "equivalent":
+        return _cluster_equivalent(key, deltas, topo, P_t, cfg)
+    return _cluster_faithful(key, deltas, topo, P_t, cfg)
+
+
+def _cluster_faithful(key, deltas, topo: Topology, P_t, cfg: OTAConfig):
+    C, M, twoN = deltas.shape
+    N = twoN // 2
+    tx = pack_cx(deltas)  # [C, M, N]
+    beta = jnp.asarray(topo.beta_mu_is, jnp.float32)      # [C', M, C_rx]
+    if not cfg.interference:
+        # zero out cross-cluster path gains
+        eye = jnp.eye(C, dtype=jnp.float32)[:, None, :]
+        beta = beta * eye
+    beta_bar_c = jnp.asarray(topo.beta_bar_c, jnp.float32)  # [C]
+    K = topo.K
+    if cfg.use_kernel:
+        return _cluster_faithful_kernel(key, tx, beta, beta_bar_c, topo, P_t)
+    ck = _chunk(K, cfg.antenna_chunk)
+    n_steps = K // ck
+    keys = jax.random.split(key, n_steps)
+
+    def fold(acc, args):
+        kk, = args
+        k1, k2 = jax.random.split(kk)
+        # h[c', m, c_rx, a, n] = sqrt(beta) g, g ~ CN(0, sigma_h2)
+        g = _cn(k1, (C, M, C, ck, N), topo.sigma_h2)
+        h = jnp.sqrt(beta)[:, :, :, None, None] * g
+        z = _cn(k2, (C, ck, N), topo.sigma_z2)
+        # received per rx cluster/antenna (eq. 8)
+        y = P_t * jnp.einsum("umcan,umn->can", h, tx) + z
+        # own-cluster matched filter: sum_m h_{c,m,c,a,n} (eq. 9)
+        mf = _own(h)
+        acc = acc + jnp.einsum("can,can->cn", jnp.conj(mf), y)
+        return acc, None
+
+    acc0 = jnp.zeros((C, N), jnp.complex64)
+    acc, _ = jax.lax.scan(fold, acc0, (keys,))
+    # eq. (12) rescale.  NOTE (normalization): the paper's literal
+    # 1/(P_t M sigma_h^2 beta_bar_c) with beta_bar_c = SUM_m beta damps the
+    # estimate by 1/M and contradicts the unbiasedness step in its own
+    # Lemma 6 proof; the consistent reading is beta_bar_c = M * (average
+    # beta), i.e. divide by P_t sigma_h^2 SUM_m beta.  Then
+    # E[est] = sum_m (beta_m/beta_bar_c) Delta_m — the beta-weighted
+    # cluster mean, = the eq. (4) ideal mean for symmetric clusters.
+    scale = 1.0 / (P_t * topo.sigma_h2 * beta_bar_c)
+    est = acc / K * scale[:, None]
+    return unpack_cx(est)
+
+
+def _cluster_faithful_kernel(key, tx, beta, beta_bar_c, topo: Topology, P_t):
+    """Pallas-kernel path: per receiving IS, materialize the [U, K, N]
+    channel slab and run the blocked matched-filter combine."""
+    from repro.kernels import mf_combine
+
+    C, M, N = tx.shape
+    U, K = C * M, topo.K
+    tx_flat = (P_t * tx).reshape(U, N)
+    keys = jax.random.split(key, 2 * C)
+    outs = []
+    for c in range(C):
+        g = _cn(keys[2 * c], (U, K, N), topo.sigma_h2)
+        h = jnp.sqrt(beta[:, :, c].reshape(U))[:, None, None] * g
+        z = _cn(keys[2 * c + 1], (K, N), topo.sigma_z2)
+        w = jnp.zeros((C, M), jnp.float32).at[c].set(1.0).reshape(U)
+        y = mf_combine(h, tx_flat, z, w)
+        outs.append(y / K / (P_t * topo.sigma_h2 * beta_bar_c[c]))
+    return unpack_cx(jnp.stack(outs))
+
+
+def _own(h):
+    """h: [C', M, C_rx, a, n] -> own-cluster channel sums [C, a, n]."""
+    C = h.shape[0]
+    idx = jnp.arange(C)
+    own = h[idx, :, idx]  # [C, M, a, n]
+    return own.sum(axis=1)
+
+
+def _cluster_equivalent(key, deltas, topo: Topology, P_t, cfg: OTAConfig):
+    """Second-order-matched surrogate for `_cluster_faithful`.
+
+    est[c] = (1/(M beta_bar_c)) sum_m beta_m (1 + eps_{m,n}) D_{c,m}
+             + CN(0, V_intra + V_inter + V_noise) per complex entry,
+    with eps ~ N(0, 1/K) (concentration of (1/K)sum_k |h|^2) and
+    variances from the Lemma 7/9 calculus.
+    """
+    C, M, twoN = deltas.shape
+    N = twoN // 2
+    K = float(topo.K)
+    tx = pack_cx(deltas)  # [C, M, N]
+    beta = jnp.asarray(topo.beta_mu_is, jnp.float32)        # [C', M, C_rx]
+    beta_own = jnp.stack([beta[c, :, c] for c in range(C)])  # [C, M]
+    bb = jnp.asarray(topo.beta_bar_c, jnp.float32)           # [C]
+
+    k_eps, k_int, k_no = jax.random.split(key, 3)
+    eps = jax.random.normal(k_eps, (C, M, N), jnp.float32) / np.sqrt(K)
+    sig = jnp.einsum("cm,cmn->cn", beta_own.astype(jnp.complex64),
+                     tx * (1.0 + eps))
+    sig = sig / bb[:, None]          # unbiased normalization (see faithful)
+
+    p2 = jnp.abs(tx) ** 2                                    # [C, M, N]
+    if cfg.interference:
+        # intra: sum_m beta_m * sum_{m'!=m} beta_m' |D_m'|^2
+        b_sum = beta_own.sum(axis=1)                         # == bb
+        w_intra = jnp.einsum("cm,cmn->cn", beta_own,
+                             p2 * (b_sum[:, None, None] - beta_own[..., None])
+                             / 1.0)
+        # w_intra[c,n] = sum_m' beta_m' |D_m'|^2 (bb_c - beta_m')  — matches
+        # sum_m beta_m sum_{m'!=m} beta_m' |D_m'|^2 after swapping sums.
+        V_intra = w_intra / (K * bb[:, None] ** 2)
+        # inter: sum_m beta_{c,m,c} * sum_{c'!=c,m'} beta_{c',m',c} |D_{c',m'}|^2
+        cross = jnp.einsum("umc,umn->cn", beta, p2) - jnp.einsum(
+            "cm,cmn->cn", beta_own, p2)
+        V_inter = bb[:, None] * cross / (K * bb[:, None] ** 2)
+    else:
+        V_intra = V_inter = jnp.zeros((C, N), jnp.float32)
+    V_noise = topo.sigma_z2 / (
+        (P_t ** 2) * topo.sigma_h2 * bb[:, None] * K)
+    noise = _cn(k_no, (C, N), 1.0) * jnp.sqrt(V_intra + V_inter + V_noise)
+    return unpack_cx(sig + noise)
+
+
+# ---------------------------------------------------------------------------
+# Global aggregation hop (ISs -> PS), eq. (15)-(19)
+# ---------------------------------------------------------------------------
+
+def global_ota(key, is_deltas: jax.Array, topo: Topology, P_is_t,
+               cfg: OTAConfig = OTAConfig()) -> jax.Array:
+    """is_deltas: [C, 2N] (IS model differences). Returns [2N]."""
+    if cfg.mode == "ideal":
+        return is_deltas.mean(axis=0)
+    beta_is = np.asarray(topo.beta_is, np.float32)
+    if cfg.mode == "equivalent":
+        return _mac_equivalent(key, is_deltas, beta_is, topo.K_ps,
+                               topo.sigma_h2, topo.sigma_z2, P_is_t,
+                               cfg.interference)
+    return _mac_faithful(key, is_deltas, beta_is, topo.K_ps, topo.sigma_h2,
+                         topo.sigma_z2, P_is_t, cfg)
+
+
+def conventional_ota(key, deltas: jax.Array, topo: Topology, P_t,
+                     cfg: OTAConfig = OTAConfig()) -> jax.Array:
+    """Conventional (single-hop) OTA FL: every MU transmits directly to
+    the PS (paper's baseline). deltas: [C, M, 2N] -> [2N]."""
+    C, M, twoN = deltas.shape
+    flat = deltas.reshape(C * M, twoN)
+    beta = np.asarray(topo.beta_mu_ps, np.float32).reshape(C * M)
+    if cfg.mode == "ideal":
+        return flat.mean(axis=0)
+    if cfg.mode == "equivalent":
+        return _mac_equivalent(key, flat, beta, topo.K_ps, topo.sigma_h2,
+                               topo.sigma_z2, P_t, cfg.interference)
+    return _mac_faithful(key, flat, beta, topo.K_ps, topo.sigma_h2,
+                         topo.sigma_z2, P_t, cfg)
+
+
+def _mac_faithful(key, deltas, beta: np.ndarray, K: int, sigma_h2, sigma_z2,
+                  P, cfg: OTAConfig):
+    """Single-cell OTA MAC with U transmitters and K rx antennas.
+
+    deltas: [U, 2N]; beta: [U]. Returns the eq.(17)-rescaled estimate [2N].
+    Used for the IS->PS hop (U=C) and conventional FL (U=CM).
+    """
+    U, twoN = deltas.shape
+    N = twoN // 2
+    tx = pack_cx(deltas)  # [U, N]
+    b = jnp.asarray(beta, jnp.float32)
+    b_bar = b.sum()
+    if cfg.use_kernel:
+        from repro.kernels import mf_combine
+        k1, k2 = jax.random.split(key)
+        g = _cn(k1, (U, K, N), sigma_h2)
+        h = jnp.sqrt(b)[:, None, None] * g
+        z = _cn(k2, (K, N), sigma_z2)
+        y = mf_combine(h, P * tx, z)
+        return unpack_cx(y / K / (P * sigma_h2 * b_bar))
+    ck = _chunk(K, cfg.antenna_chunk)
+    n_steps = K // ck
+    keys = jax.random.split(key, n_steps)
+
+    def fold(acc, args):
+        kk, = args
+        k1, k2 = jax.random.split(kk)
+        g = _cn(k1, (U, ck, N), sigma_h2)
+        h = jnp.sqrt(b)[:, None, None] * g
+        z = _cn(k2, (ck, N), sigma_z2)
+        y = P * jnp.einsum("uan,un->an", h, tx) + z
+        mf = h.sum(axis=0)  # [a, n]
+        return acc + jnp.einsum("an,an->n", jnp.conj(mf), y), None
+
+    acc, _ = jax.lax.scan(fold, jnp.zeros((N,), jnp.complex64), (keys,))
+    est = acc / K / (P * sigma_h2 * b_bar)   # unbiased normalization
+    return unpack_cx(est)
+
+
+def _mac_equivalent(key, deltas, beta: np.ndarray, K: int, sigma_h2,
+                    sigma_z2, P, interference: bool):
+    U, twoN = deltas.shape
+    N = twoN // 2
+    tx = pack_cx(deltas)
+    b = jnp.asarray(beta, jnp.float32)
+    b_bar = b.sum()
+    k_eps, k_no = jax.random.split(key)
+    eps = jax.random.normal(k_eps, (U, N), jnp.float32) / np.sqrt(float(K))
+    sig = jnp.einsum("u,un->n", b.astype(jnp.complex64), tx * (1.0 + eps))
+    sig = sig / b_bar                        # unbiased normalization
+    if interference and U > 1:
+        p2 = jnp.abs(tx) ** 2
+        w = jnp.einsum("u,un->n", b, p2 * (b_bar - b)[:, None])
+        V_int = w / (float(K) * b_bar ** 2)
+    else:
+        V_int = jnp.zeros((N,), jnp.float32)
+    V_noise = sigma_z2 / ((P ** 2) * sigma_h2 * b_bar * float(K))
+    noise = _cn(k_no, (N,), 1.0) * jnp.sqrt(V_int + V_noise)
+    return unpack_cx(sig + noise)

@@ -1,0 +1,183 @@
+"""W-HFL federated trainer (paper §II-III protocol, Mode A: paper scale).
+
+Per global round t:
+  - every MU (c,m) runs `tau` local optimizer steps from its cluster
+    model theta_IS[c]  (eq. 2),
+  - each cluster OTA-aggregates the MU deltas at its IS (eqs. 8-13),
+    repeated for `I` cluster iterations,
+  - ISs OTA-transmit their accumulated deltas to the PS, which closes
+    the round (eqs. 15-18).
+
+The whole round is one jitted function; MU training is vmapped over
+(cluster, user).  Baselines: `mode="conventional"` (single-hop OTA FL,
+the paper's main comparison) and `OTAConfig(mode="ideal")` (error-free).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core.channel import (OTAConfig, cluster_ota, conventional_ota,
+                                global_ota)
+from repro.core.topology import Topology, power_schedule
+from repro.optim import Optimizer, apply_updates
+
+
+@dataclass(frozen=True)
+class WHFLConfig:
+    tau: int = 1                 # local (user) iterations per cluster round
+    I: int = 1                   # cluster iterations per global round
+    batch: int = 500
+    mode: str = "whfl"           # "whfl" | "conventional"
+    ota: OTAConfig = field(default_factory=OTAConfig)
+    power_base: float = 1.0
+    power_slope: float = 1e-2
+    power_is_factor: float = 20.0
+    power_low: bool = False      # P_t,low = 0.5 P_t (paper's I=1 runs)
+
+
+class WHFLTrainer:
+    """loss_fn(params, xb, yb, rng) -> scalar; data X/Y: [C, M, n, ...]."""
+
+    def __init__(self, loss_fn: Callable, local_opt: Optimizer,
+                 topo: Topology, cfg: WHFLConfig, X: np.ndarray,
+                 Y: np.ndarray):
+        self.loss_fn = loss_fn
+        self.opt = local_opt
+        self.topo = topo
+        self.cfg = cfg
+        self.X = jnp.asarray(X)
+        self.Y = jnp.asarray(Y)
+        self.C, self.M = topo.C, topo.M
+        self._spec = None
+        self._round = jax.jit(self._round_impl)
+
+    # -- state ---------------------------------------------------------------
+
+    def init_state(self, params):
+        self._spec = agg.make_flat_spec(params)
+        C, M = self.C, self.M
+        opt0 = self.opt.init(params)
+        opt = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (C, M) + x.shape).copy(), opt0)
+        return {
+            "theta": params,
+            "opt": opt,
+            "t": jnp.zeros((), jnp.int32),
+            "power_edge": jnp.zeros(()),   # sum of per-symbol tx power, edge
+            "power_is": jnp.zeros(()),     # same, IS->PS hop
+            "n_edge_tx": jnp.zeros(()),    # transmissions counted
+            "n_is_tx": jnp.zeros(()),
+        }
+
+    # -- one MU's local training (vmapped over C, M) --------------------------
+
+    def _local_train(self, theta, opt_state, x, y, key, step):
+        def body(carry, k):
+            th, st = carry
+            kb, kd = jax.random.split(k)
+            idx = jax.random.randint(kb, (self.cfg.batch,), 0, x.shape[0])
+            grads = jax.grad(self.loss_fn)(th, x[idx], y[idx], kd)
+            upd, st = self.opt.update(grads, st, th, step)
+            return (apply_updates(th, upd), st), None
+
+        keys = jax.random.split(key, self.cfg.tau)
+        (th, st), _ = jax.lax.scan(body, (theta, opt_state), keys)
+        delta = jax.tree.map(lambda a, b: a - b, th, theta)
+        return delta, st
+
+    # -- one global round ------------------------------------------------------
+
+    def _round_impl(self, state, key, P_t, P_is_t):
+        C, M, cfg, spec = self.C, self.M, self.cfg, self._spec
+        theta = state["theta"]
+        step = state["t"]
+
+        def users_train(theta_IS, opt, key):
+            """theta_IS: [C]-stacked cluster models -> flat deltas [C,M,2N]."""
+            keys = jax.random.split(key, C * M).reshape(C, M, 2)
+            train_u = lambda th, st, x, y, k: self._local_train(
+                th, st, x, y, k, step)
+            train_c = jax.vmap(train_u, in_axes=(None, 0, 0, 0, 0))
+            deltas, opt = jax.vmap(train_c)(theta_IS, opt, self.X, self.Y,
+                                            keys)
+            flat = jax.vmap(jax.vmap(lambda d: agg.flatten(spec, d)))(deltas)
+            return flat, opt
+
+        if cfg.mode == "conventional":
+            theta_IS = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (C,) + x.shape), theta)
+            k1, k2 = jax.random.split(key)
+            flat, opt = users_train(theta_IS, state["opt"], k1)
+            est = conventional_ota(k2, flat, self.topo, P_t, cfg.ota)
+            theta = apply_updates(theta, agg.unflatten(spec, est))
+            p_edge = agg.symbol_power(flat, P_t)
+            return {**state, "theta": theta, "opt": opt,
+                    "t": step + 1,
+                    "power_edge": state["power_edge"] + p_edge,
+                    "n_edge_tx": state["n_edge_tx"] + 1.0,
+                    "power_is": state["power_is"],
+                    "n_is_tx": state["n_is_tx"]}
+
+        # --- W-HFL ---
+        theta_IS = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (C,) + x.shape), theta)
+
+        def cluster_iter(carry, k):
+            th_IS, opt, p_acc = carry
+            k1, k2 = jax.random.split(k)
+            flat, opt = users_train(th_IS, opt, k1)
+            est = cluster_ota(k2, flat, self.topo, P_t, cfg.ota)  # [C, 2N]
+            th_IS = jax.vmap(
+                lambda th, e: apply_updates(th, agg.unflatten(spec, e))
+            )(th_IS, est)
+            return (th_IS, opt, p_acc + agg.symbol_power(flat, P_t)), None
+
+        keys = jax.random.split(key, cfg.I + 1)
+        (theta_IS, opt, p_edge), _ = jax.lax.scan(
+            cluster_iter, (theta_IS, state["opt"], jnp.zeros(())),
+            keys[: cfg.I])
+
+        is_deltas = jax.vmap(
+            lambda th: agg.flatten(
+                spec, jax.tree.map(lambda a, b: a - b, th, theta)))(theta_IS)
+        est = global_ota(keys[-1], is_deltas, self.topo, P_is_t, cfg.ota)
+        theta = apply_updates(theta, agg.unflatten(spec, est))
+        p_is = agg.symbol_power(is_deltas, P_is_t)
+        return {**state, "theta": theta, "opt": opt, "t": step + 1,
+                "power_edge": state["power_edge"] + p_edge,
+                "n_edge_tx": state["n_edge_tx"] + float(cfg.I),
+                "power_is": state["power_is"] + p_is,
+                "n_is_tx": state["n_is_tx"] + 1.0}
+
+    # -- public API ------------------------------------------------------------
+
+    def round(self, state, key):
+        t = int(state["t"])
+        P_t, P_is_t = power_schedule(
+            t, self.cfg.power_base, self.cfg.power_slope,
+            self.cfg.power_is_factor, self.cfg.power_low)
+        return self._round(state, key, P_t, P_is_t)
+
+    def avg_edge_power(self, state) -> float:
+        n = float(state["n_edge_tx"])
+        return float(state["power_edge"]) / max(n, 1.0)
+
+    def avg_is_power(self, state) -> float:
+        n = float(state["n_is_tx"])
+        return float(state["power_is"]) / max(n, 1.0)
+
+
+def accuracy(apply_fn, params, X, Y, batch: int = 2000) -> float:
+    n = len(X)
+    correct = 0
+    for i in range(0, n, batch):
+        logits = apply_fn(params, X[i:i + batch])
+        correct += int((jnp.argmax(logits, -1) == Y[i:i + batch]).sum())
+    return correct / n

@@ -1,0 +1,9 @@
+from repro.data.datasets import synthetic_mnist, synthetic_cifar, lm_corpus
+from repro.data.partition import (
+    partition_iid, partition_noniid_shards, partition_cluster_noniid,
+)
+
+__all__ = [
+    "synthetic_mnist", "synthetic_cifar", "lm_corpus",
+    "partition_iid", "partition_noniid_shards", "partition_cluster_noniid",
+]

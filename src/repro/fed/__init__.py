@@ -1,0 +1,3 @@
+from repro.fed.clients import ClientPool, ClientState, make_pool
+
+__all__ = ["ClientPool", "ClientState", "make_pool"]

@@ -1,0 +1,66 @@
+"""Federated client-state plumbing (Mode A: paper scale).
+
+Wraps the partitioned datasets into a `ClientPool` with per-client
+sampling state, participation schedules and cluster membership — the
+orchestration layer between data partitioners and the W-HFL trainer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class ClientState:
+    cluster: int
+    index: int            # within-cluster index m
+    n_samples: int
+    rounds_participated: int = 0
+
+
+@dataclass
+class ClientPool:
+    """C x M clients with stacked data arrays [C, M, n, ...]."""
+    X: np.ndarray
+    Y: np.ndarray
+    clients: List[ClientState] = field(default_factory=list)
+
+    def __post_init__(self):
+        if not self.clients:
+            C, M, n = self.Y.shape[:3]
+            self.clients = [ClientState(c, m, n)
+                            for c in range(self.C) for m in range(self.M)]
+
+    @property
+    def C(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def M(self) -> int:
+        return self.X.shape[1]
+
+    def client(self, c: int, m: int) -> ClientState:
+        return self.clients[c * self.M + m]
+
+    def mark_round(self):
+        for cl in self.clients:
+            cl.rounds_participated += 1
+
+    def label_histogram(self, n_classes: int = 10) -> np.ndarray:
+        """[C, M, n_classes] label counts — used to verify the paper's
+        i.i.d / non-i.i.d / cluster-non-i.i.d partition properties."""
+        C, M, n = self.Y.shape
+        out = np.zeros((C, M, n_classes), np.int64)
+        for c in range(C):
+            for m in range(M):
+                out[c, m] = np.bincount(self.Y[c, m].astype(np.int64),
+                                        minlength=n_classes)[:n_classes]
+        return out
+
+
+def make_pool(partitioner: Callable, seed: int, X: np.ndarray, Y: np.ndarray,
+              C: int, M: int, **kw) -> ClientPool:
+    Xs, Ys = partitioner(seed, X, Y, C, M, **kw)
+    return ClientPool(X=Xs, Y=Ys)

@@ -1,0 +1,7 @@
+from repro.kernels.flash_attn import flash_attention, flash_mha
+from repro.kernels.ops import mf_combine
+from repro.kernels.ota_combine import ota_combine
+from repro.kernels.ref import flash_attention_ref, ota_combine_ref
+
+__all__ = ["mf_combine", "ota_combine", "ota_combine_ref",
+           "flash_attention", "flash_mha", "flash_attention_ref"]

@@ -1,0 +1,41 @@
+"""Jit'd public wrappers for the OTA kernels.
+
+`mf_combine` is the drop-in compute core used by
+`repro.core.channel` when ``OTAConfig(use_kernel=True)``: it takes the
+complex channel/symbol/noise tensors the channel model produces, runs
+the planar Pallas kernel (interpret-mode on CPU hosts, compiled on
+TPU), and returns the combined complex vector of eq. (9)/(16).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ota_combine import ota_combine
+from repro.kernels.ref import ota_combine_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def mf_combine(h: jax.Array, t: jax.Array, z: jax.Array,
+               w: jax.Array | None = None, *, use_kernel: bool = True,
+               block_n: int = 512, block_k: int = 8) -> jax.Array:
+    """y[n] = sum_k conj(sum_u w_u h[u,k,n]) (sum_u h[u,k,n] t[u,n] + z[k,n]).
+
+    h: complex64 [U, K, N]; t: complex64 [U, N]; z: complex64 [K, N];
+    w: float32 [U] matched-filter weights (default: all ones).
+    Returns complex64 [N].
+    """
+    U, K, N = h.shape
+    if w is None:
+        w = jnp.ones((U,), jnp.float32)
+    args = (jnp.real(h), jnp.imag(h), jnp.real(t), jnp.imag(t),
+            jnp.real(z), jnp.imag(z), w)
+    if use_kernel:
+        y_re, y_im = ota_combine(*args, block_n=block_n, block_k=block_k,
+                                 interpret=not _on_tpu())
+    else:
+        y_re, y_im = ota_combine_ref(*args)
+    return jax.lax.complex(y_re, y_im)

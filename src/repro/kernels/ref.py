@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for the `ota_combine` kernel.
+
+Computes the OTA receive hot-spot (paper eqs. 9/11 and 16/19): given
+per-transmitter channel tensors, transmitted complex symbols, receiver
+noise and a matched-filter weight per transmitter, produce the combined
+(un-rescaled) estimate
+
+    y[n] = sum_k  conj( sum_u w_u h[u,k,n] ) * ( sum_u h[u,k,n] t[u,n] + z[k,n] )
+
+The caller divides by K and applies the eq. (12)/(17) rescale.  All
+arrays are planar float32 pairs (re, im) — TPU Pallas has no complex
+dtype, so the oracle mirrors the kernel's planar layout exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ota_combine_ref(h_re, h_im, t_re, t_im, z_re, z_im, w):
+    """h: [U, K, N]; t: [U, N]; z: [K, N]; w: [U] float32.
+
+    Returns (y_re [N], y_im [N]).
+    """
+    # received signal per antenna: r[k,n] = sum_u h[u,k,n] * t[u,n] + z[k,n]
+    r_re = jnp.einsum("ukn,un->kn", h_re, t_re) - jnp.einsum(
+        "ukn,un->kn", h_im, t_im) + z_re
+    r_im = jnp.einsum("ukn,un->kn", h_re, t_im) + jnp.einsum(
+        "ukn,un->kn", h_im, t_re) + z_im
+    # matched filter: mf[k,n] = sum_u w_u h[u,k,n]
+    mf_re = jnp.einsum("u,ukn->kn", w, h_re)
+    mf_im = jnp.einsum("u,ukn->kn", w, h_im)
+    # y = sum_k conj(mf) * r
+    y_re = jnp.sum(mf_re * r_re + mf_im * r_im, axis=0)
+    y_im = jnp.sum(mf_re * r_im - mf_im * r_re, axis=0)
+    return y_re, y_im
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """Pure-jnp oracle for kernels.flash_attn.flash_attention.
+
+    q: [B, Lq, H, hd]; k, v: [B, S, KV, hd] -> [B, Lq, H*hd].
+    """
+    import math
+
+    B, Lq, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Lq, KV, G, hd)
+    s = jnp.einsum("blkgd,bskd->bklgs", qg, k).astype(jnp.float32)
+    s = s / math.sqrt(hd)
+    if causal:
+        mask = jnp.arange(S)[None, :] <= jnp.arange(Lq)[:, None]
+        s = jnp.where(mask[None, None, :, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bklgs,bskd->blkgd", w, v)
+    return out.reshape(B, Lq, H * hd)

@@ -1,0 +1,3 @@
+from repro.launch.mesh import make_production_mesh, refine_mesh, mesh_counts
+
+__all__ = ["make_production_mesh", "refine_mesh", "mesh_counts"]

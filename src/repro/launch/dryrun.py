@@ -1,0 +1,195 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production mesh, without allocating a single parameter.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape train_4k [--multi-pod] [--path fused] [--json out.jsonl]
+
+For each pair it prints memory_analysis() (proves the program fits) and
+cost_analysis() (FLOPs/bytes for the roofline), plus the parsed
+collective schedule.  Failures here (sharding mismatch, OOM at compile,
+unsupported collective) are bugs in the system.
+
+NOTE: the XLA_FLAGS line above MUST run before any jax import — jax
+locks the device count on first init.  Do not import this module from
+tests or benchmarks (they must see 1 device).
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.archs import ASSIGNED
+from repro.launch import hlo as hlo_mod
+from repro.launch.mesh import make_production_mesh
+from repro.launch.serve import (build_decode_step, build_prefill_step,
+                                cache_specs, cache_shardings)
+from repro.launch.train import (TrainConfig, abstract_state,
+                                build_fused_train_step, build_train_step,
+                                make_batch)
+from repro.core.dist import OTADistConfig
+
+
+def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+               path: str = "structural", tau: int = 1, I: int = 1,
+               donate: bool = True, verbose: bool = True,
+               cfg_overrides: dict | None = None,
+               tcfg_overrides: dict | None = None,
+               ota_overrides: dict | None = None):
+    """Lower + compile one (arch, shape, mesh) combination.
+
+    path: "structural" (paper-faithful shard_map two-hop W-HFL),
+          "fused" (beyond-paper fused FSDP path, train only),
+          "ideal" (error-free aggregation baseline).
+    The *_overrides dicts patch ArchConfig / TrainConfig / OTADistConfig
+    fields — the §Perf hillclimb hook.
+    Returns a result record dict.
+    """
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.with_(**cfg_overrides)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        ota_kw = dict(mode="ideal" if path == "ideal" else "equivalent",
+                      fused=False)
+        ota_kw.update(ota_overrides or {})
+        tcfg_kw = dict(tau=tau, I=I, ota=OTADistConfig(**ota_kw),
+                       outer="adamw", fsdp=(path == "fused"))
+        tcfg_kw.update(tcfg_overrides or {})
+        tcfg = TrainConfig(**tcfg_kw)
+        if path == "fused":
+            step, _, shardings_fn, jmesh = build_fused_train_step(
+                cfg, shape, mesh, tcfg)
+        else:
+            step, _, shardings_fn, jmesh = build_train_step(
+                cfg, shape, mesh, tcfg)
+        state_shapes, axes = abstract_state(cfg, tcfg)
+        sh = shardings_fn(axes)
+        batch = make_batch(cfg, shape)
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        jf = jax.jit(
+            step,
+            in_shardings=(sh["state"], sh["batch"], sh["key"]),
+            out_shardings=(sh["state"], sh["metrics"]),
+            donate_argnums=(0,) if donate else ())
+        lowered = jf.lower(state_shapes, batch, key)
+    elif shape.kind == "prefill":
+        step, batch_specs, shardings_fn, rules = build_prefill_step(
+            cfg, shape, mesh)
+        from repro.sharding import param_sharding_tree
+        tcfg = TrainConfig(outer="add")
+        state_shapes, axes = abstract_state(cfg, tcfg)
+        p_sh = param_sharding_tree(axes, rules)
+        bspec, out_sh = shardings_fn()
+        jf = jax.jit(step, in_shardings=(p_sh, bspec),
+                     out_shardings=out_sh)
+        with mesh:
+            lowered = jf.lower(state_shapes["params"], batch_specs())
+    else:  # decode
+        step, token_specs, shardings_fn, rules = build_decode_step(
+            cfg, shape, mesh)
+        from repro.sharding import param_sharding_tree
+        tcfg = TrainConfig(outer="add")
+        state_shapes, axes = abstract_state(cfg, tcfg)
+        p_sh = param_sharding_tree(axes, rules)
+        tok_sh, cache_sh, out_sh = shardings_fn()
+        jf = jax.jit(step, in_shardings=(p_sh, cache_sh, tok_sh),
+                     out_shardings=(out_sh, cache_sh),
+                     donate_argnums=(1,) if donate else ())
+        with mesh:
+            lowered = jf.lower(state_shapes["params"],
+                               cache_specs(cfg, shape), token_specs())
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    txt = compiled.as_text()
+    mem = hlo_mod.memory_summary(compiled)
+    # trip-count-aware cost model (XLA's cost_analysis visits while
+    # bodies once — a 28-layer scan would be undercounted 28x)
+    from repro.launch import hlo_cost
+    costs = hlo_cost.analyze(txt)
+    roof = hlo_mod.Roofline(flops=costs.flops, hbm_bytes=costs.hbm_bytes,
+                            coll_bytes=costs.coll_bytes)
+    xla_ca = compiled.cost_analysis()
+    if isinstance(xla_ca, list):
+        xla_ca = xla_ca[0]
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "path": path, "tau": tau, "I": I,
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "memory": mem,
+        "roofline": roof.as_dict(),
+        "xla_flops_body_once": float(xla_ca.get("flops", 0.0)),
+        "collectives": {k: v for k, v in sorted(costs.coll_by_kind.items())},
+        "coll_by_group": {f"{k}@{g}": v
+                          for (k, g), v in sorted(costs.coll_by_group.items())},
+        "ok": True,
+    }
+    if verbose:
+        gb = mem.get("total_hbm_bytes", 0) / 2 ** 30
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']} ({path}): "
+              f"OK  mem/dev={gb:.2f}GiB  "
+              f"flops={roof.flops:.3e}  hbm={roof.hbm_bytes:.3e}  "
+              f"coll={roof.coll_bytes:.3e}  dom={roof.dominant}  "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        sys.stdout.flush()
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--path", default="structural",
+                    choices=["structural", "fused", "ideal"])
+    ap.add_argument("--tau", type=int, default=1)
+    ap.add_argument("--I", type=int, default=1)
+    ap.add_argument("--json", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = lower_pair(arch, shape, multi_pod=mp,
+                                     path=args.path, tau=args.tau, I=args.I)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    n_fail += 1
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "path": args.path, "ok": False,
+                           "error": f"{type(e).__name__}: {e}"}
+                    print(f"[dryrun] {arch} x {shape} "
+                          f"x {rec['mesh']}: FAIL {rec['error'][:200]}")
+                    traceback.print_exc(limit=3)
+                if args.json:
+                    with open(args.json, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    if n_fail:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""§Perf hillclimb driver: per selected (arch x shape) pair, run the
+baseline and a sequence of hypothesis-driven variants, re-lowering and
+re-analysing after each change (EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python -m repro.launch.hillclimb --pair H1 \
+        --json results/perf_h1.jsonl
+"""
+
+import argparse
+import json
+import sys
+
+from repro.launch.dryrun import lower_pair
+
+# Each variant: (label, hypothesis, kwargs for lower_pair)
+HILLCLIMBS = {
+    # paper-representative pair: W-HFL train step, dense GQA arch whose
+    # 12 heads / 2 KV heads cannot shard over model=16
+    "H1": {
+        "arch": "qwen2-1.5b", "shape": "train_4k",
+        "variants": [
+            ("baseline", "paper-faithful structural path", {}),
+            ("bf16-scores",
+             "attention scores are the dominant HBM term; bf16 scores "
+             "halve score read/write traffic -> t_mem down ~25-40%",
+             dict(cfg_overrides=dict(scores_f32=False))),
+            ("online-softmax",
+             "kv-blocked flash-style recurrence keeps score tiles "
+             "O(QB x KB) -> peak temp memory down; traffic similar",
+             dict(cfg_overrides=dict(attn_impl="online", kv_block=1024))),
+            ("seq-shard-attn",
+             "12 heads %% 16 != 0 -> attention compute is replicated "
+             "16x over 'model'; sharding q rows over 'model' instead "
+             "cuts attention FLOPs ~16x for ~2 allgathers/layer",
+             dict(cfg_overrides=dict(seq_shard_attn=True))),
+            ("scalar-interference",
+             "per-element Lemma-7 interference costs a 2nd grad-sized "
+             "psum per hop; scalar power-matched approx halves W-HFL "
+             "collective bytes",
+             dict(ota_overrides=dict(per_element_interference=False))),
+            ("combined",
+             "all confirmed wins together",
+             dict(cfg_overrides=dict(scores_f32=False, attn_impl="online",
+                                     kv_block=1024, seq_shard_attn=True),
+                  ota_overrides=dict(per_element_interference=False))),
+            ("combined+bf16-params",
+             "bf16 params halve param/grad/delta buffers (memory term)",
+             dict(cfg_overrides=dict(scores_f32=False, attn_impl="online",
+                                     kv_block=1024, seq_shard_attn=True,
+                                     param_dtype="bfloat16"),
+                  ota_overrides=dict(per_element_interference=False))),
+        ],
+    },
+    # most collective-bound pair (from the baseline roofline table)
+    "H2": {
+        "arch": "qwen3-moe-235b-a22b", "shape": "prefill_32k",
+        "variants": [
+            ("baseline", "EP MoE prefill", {}),
+            ("cap-1.0",
+             "capacity 1.25 -> 1.0 shrinks the dispatch buffers that "
+             "feed the EP collectives by 20%",
+             dict(cfg_overrides=dict(capacity_factor=1.0))),
+            ("bf16-scores",
+             "64-head attention is sharded; scores traffic still large "
+             "at 32k seq",
+             dict(cfg_overrides=dict(scores_f32=False))),
+            ("online-softmax",
+             "32k x 32k score tiles -> online recurrence",
+             dict(cfg_overrides=dict(attn_impl="online", kv_block=2048))),
+            ("combined", "all confirmed wins",
+             dict(cfg_overrides=dict(capacity_factor=1.0, scores_f32=False,
+                                     attn_impl="online", kv_block=2048))),
+        ],
+    },
+    # worst memory pair: 480B MoE train — the fused FSDP path is what
+    # makes it feasible (beyond-paper)
+    "H3": {
+        "arch": "arctic-480b", "shape": "train_4k",
+        "variants": [
+            ("baseline", "structural path, params replicated over data "
+             "(needed for per-user delta identity) -> memory blow-up", {}),
+            ("fused-fsdp",
+             "fused path folds OTA gains into loss weights -> no "
+             "per-user param identity needed -> FSDP over data axes: "
+             "params/grads/moments sharded 16x",
+             dict(path="fused")),
+            ("fused-fsdp+bf16-moments",
+             "AdamW moments in bf16: optimizer memory halves",
+             dict(path="fused",
+                  tcfg_overrides=dict(moment_dtype="bfloat16"))),
+            ("fused-fsdp+bf16-moments+online",
+             "attention score tiles at 4k seq",
+             dict(path="fused",
+                  tcfg_overrides=dict(moment_dtype="bfloat16"),
+                  cfg_overrides=dict(attn_impl="online", kv_block=1024,
+                                     scores_f32=False))),
+        ],
+    },
+}
+
+
+def run_pair(name: str, json_path: str | None = None, multi_pod=False):
+    spec = HILLCLIMBS[name]
+    print(f"=== {name}: {spec['arch']} x {spec['shape']} ===")
+    base = None
+    for label, hypothesis, kw in spec["variants"]:
+        try:
+            rec = lower_pair(spec["arch"], spec["shape"], verbose=False,
+                             multi_pod=multi_pod, **kw)
+        except Exception as e:  # noqa: BLE001
+            print(f"[{name}/{label}] FAIL {type(e).__name__}: {e}")
+            continue
+        rec["hillclimb"] = name
+        rec["variant"] = label
+        rec["hypothesis"] = hypothesis
+        r = rec["roofline"]
+        mem = rec["memory"].get("total_hbm_bytes", 0) / 2 ** 30
+        if base is None:
+            base = r, mem
+            print(f"[{name}/{label}] flops={r['flops']:.3e} "
+                  f"hbm={r['hbm_bytes']:.3e} coll={r['coll_bytes']:.3e} "
+                  f"mem={mem:.1f}GiB dom={r['dominant']}")
+        else:
+            b, bm = base
+            print(f"[{name}/{label}] flops={r['flops']:.3e} "
+                  f"({r['flops'] / b['flops']:.2f}x) "
+                  f"hbm={r['hbm_bytes']:.3e} "
+                  f"({r['hbm_bytes'] / b['hbm_bytes']:.2f}x) "
+                  f"coll={r['coll_bytes']:.3e} "
+                  f"({r['coll_bytes'] / max(b['coll_bytes'], 1):.2f}x) "
+                  f"mem={mem:.1f}GiB ({mem / max(bm, 1e-9):.2f}x) "
+                  f"dom={r['dominant']}")
+        sys.stdout.flush()
+        if json_path:
+            with open(json_path, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default=None, choices=[*HILLCLIMBS, None])
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    pairs = [args.pair] if args.pair else list(HILLCLIMBS)
+    for p in pairs:
+        run_pair(p, args.json, multi_pod=args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

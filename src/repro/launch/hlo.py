@@ -1,0 +1,156 @@
+"""Compiled-HLO analysis: collective-traffic accounting + roofline terms.
+
+cost_analysis() gives HLO FLOPs and bytes, but not collective bytes —
+those are parsed from the compiled HLO text by summing the result sizes
+of every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute op, classified by replica-group size so the cluster
+hop (small groups) and the pod-crossing global hop (large groups) are
+separately visible.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*) = (\([^)]*\)|\S+) (all-reduce|all-gather|reduce-scatter"
+    r"|all-to-all|collective-permute|collective-broadcast)(-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    # op kind -> total result bytes (per device)
+    by_kind: Dict[str, int] = field(default_factory=dict)
+    # (op kind, group size) -> bytes; group size 0 = unknown
+    by_group: Dict[Tuple[str, int], int] = field(default_factory=dict)
+    n_ops: int = 0
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.by_kind.values())
+
+    def bytes_crossing(self, min_group: int) -> int:
+        """Bytes moved by collectives whose replica groups have at least
+        `min_group` participants (e.g. pod-crossing ops)."""
+        return sum(v for (k, g), v in self.by_group.items()
+                   if g >= min_group or g == 0)
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        _, type_str, kind, start = m.groups()
+        if start and kind != "all-reduce":
+            pass  # -start variants counted like their base op
+        nbytes = _shape_bytes(type_str)
+        gsize = 0
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            gsize = gm.group(1).count(",") + 1
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                gsize = int(gi.group(2))
+        st.by_kind[kind] = st.by_kind.get(kind, 0) + nbytes
+        key = (kind, gsize)
+        st.by_group[key] = st.by_group.get(key, 0) + nbytes
+        st.n_ops += 1
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Roofline (TPU v5e per-chip constants, from the assignment brief)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+
+@dataclass
+class Roofline:
+    flops: float                 # per-device HLO FLOPs
+    hbm_bytes: float             # per-device HLO bytes accessed
+    coll_bytes: float            # per-device collective bytes
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+
+    def __post_init__(self):
+        self.t_compute = self.flops / PEAK_FLOPS
+        self.t_memory = self.hbm_bytes / HBM_BW
+        self.t_collective = self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+        }
+
+
+def roofline_from_compiled(compiled, hlo_text: Optional[str] = None) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    txt = hlo_text if hlo_text is not None else compiled.as_text()
+    st = collective_stats(txt)
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=float(st.total_bytes))
+
+
+def memory_summary(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes"]
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if "argument_size_in_bytes" in out and "temp_size_in_bytes" in out:
+        out["total_hbm_bytes"] = (out["argument_size_in_bytes"]
+                                  + out["output_size_in_bytes"]
+                                  + out["temp_size_in_bytes"])
+    return out

@@ -1,0 +1,273 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's HloCostAnalysis (what `compiled.cost_analysis()` exposes) visits a
+while-loop body ONCE — a jax.lax.scan over 28 layers under-reports
+FLOPs, bytes and collective traffic by ~28x.  This module re-parses the
+compiled HLO text, extracts scan trip counts from the loop conditions,
+and accumulates
+
+    flops      — dot/convolution FLOPs (2 * prod(result) * K)
+    hbm_bytes  — per-instruction operand+result bytes (fusion = one op),
+                 the same convention XLA uses
+    coll_bytes — collective result bytes, by op kind and replica-group
+                 size
+
+with every while body multiplied by its trip count (nested loops
+multiply).  Validated against an unrolled lowering in
+tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}\d]+))\s+"
+    r"([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLED = re.compile(r"(?:to_apply|condition|body|called_computations=\{|"
+                     r"branch_computations=\{)[=]?%?([\w.\-]+)")
+_GROUPS = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "iota", "rng-get-and-update-state"}
+
+_COLL_OPS = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute", "collective-broadcast",
+             "all-reduce-start", "all-gather-start",
+             "collective-permute-start"}
+
+
+def _shape_info(type_str: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """Return (total bytes, [(dtype, dims), ...]) for an HLO type."""
+    shapes = []
+    total = 0
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",") if x]
+        n = 1
+        for x in d:
+            n *= x
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append((dt, d))
+    return total, shapes
+
+
+@dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+    out_bytes: int = 0
+    operands: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    coll_by_group: Dict[Tuple[str, int], float] = field(default_factory=dict)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += mult * other.flops
+        self.hbm_bytes += mult * other.hbm_bytes
+        self.coll_bytes += mult * other.coll_bytes
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0) + mult * v
+        for k, v in other.coll_by_group.items():
+            self.coll_by_group[k] = self.coll_by_group.get(k, 0) + mult * v
+
+
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, List[_Instr]], Optional[str]]:
+    """(computation name -> instruction list, entry computation name)."""
+    comps: Dict[str, List[_Instr]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            name, type_str, op, rest = m.groups()
+            out_b, _ = _shape_info(type_str)
+            # operand names: %refs inside the call parens, before attrs
+            paren = rest.split("),")[0]
+            operands = _OPERAND_RE.findall(paren)
+            comps[cur].append(_Instr(name=name, type_str=type_str, op=op,
+                                     rest=rest, out_bytes=out_b,
+                                     operands=operands))
+    return comps, entry
+
+
+def _trip_count(cond_instrs: List[_Instr]) -> int:
+    """jax scans lower to `lt(i, N)` / `compare(i, N), direction=LT` with
+    N a constant in the condition computation; take the max s32 constant."""
+    best = 1
+    for ins in cond_instrs:
+        if ins.op == "constant" and "s32" in ins.type_str:
+            m = re.search(r"constant\((\d+)\)", "constant(" + ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(ins: _Instr, shapes: Dict[str, List[Tuple[str, List[int]]]]):
+    _, out_shapes = _shape_info(ins.type_str)
+    out_elems = 1
+    for _, dims in out_shapes:
+        for d in dims:
+            out_elems *= d
+    # contracted size from lhs shape + lhs_contracting_dims
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    k = 1
+    if m and ins.operands:
+        lhs = shapes.get(ins.operands[0])
+        if lhs:
+            dims = lhs[0][1]
+            for i in (int(x) for x in m.group(1).split(",") if x):
+                if i < len(dims):
+                    k *= dims[i]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(ins: _Instr, shapes) -> float:
+    _, out_shapes = _shape_info(ins.type_str)
+    out_elems = 1
+    for _, dims in out_shapes:
+        for d in dims:
+            out_elems *= d
+    # kernel: operand 1
+    kshape = shapes.get(ins.operands[1]) if len(ins.operands) > 1 else None
+    k = 1
+    if kshape:
+        dims = kshape[0][1]
+        for d in dims[:-1]:   # all but output-feature dim
+            k *= d
+    return 2.0 * out_elems * k
+
+
+def analyze(text: str) -> Costs:
+    comps, entry = parse_hlo(text)
+    # shape table per computation (for dot contraction lookup)
+    shape_tables = {
+        cname: {i.name: _shape_info(i.type_str)[1] for i in instrs}
+        for cname, instrs in comps.items()}
+
+    memo: Dict[str, Costs] = {}
+
+    def comp_cost(cname: str) -> Costs:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = Costs()  # cycle guard
+        c = Costs()
+        instrs = comps.get(cname, [])
+        shapes = shape_tables.get(cname, {})
+        for ins in instrs:
+            if ins.op in _SKIP_OPS:
+                continue
+            if ins.op == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                trips = _trip_count(comps.get(cond, [])) if cond else 1
+                if body:
+                    c.add(comp_cost(body), mult=trips)
+                continue
+            if ins.op in ("call", "conditional"):
+                # transparent: cost = inner computation's cost
+                for m in _CALLED.finditer(ins.rest):
+                    sub = m.group(1)
+                    if sub in comps and sub != cname:
+                        c.add(comp_cost(sub))
+                continue
+            if ins.op in ("fusion", "custom-call"):
+                # fusion = ONE op: operands + result bytes (XLA
+                # convention); still pick up dots/collectives inside
+                for m in _CALLED.finditer(ins.rest):
+                    sub = m.group(1)
+                    if sub in comps and sub != cname:
+                        inner = comp_cost(sub)
+                        c.flops += inner.flops
+                        c.coll_bytes += inner.coll_bytes
+                        for k, v in inner.coll_by_kind.items():
+                            c.coll_by_kind[k] = c.coll_by_kind.get(k, 0) + v
+                        for k, v in inner.coll_by_group.items():
+                            c.coll_by_group[k] = (c.coll_by_group.get(k, 0)
+                                                  + v)
+            # bytes: operands + result (XLA HloCostAnalysis convention)
+            op_bytes = ins.out_bytes
+            for o in ins.operands:
+                if o in shapes:
+                    b = 0
+                    for dt, dims in shapes[o]:
+                        n = 1
+                        for d in dims:
+                            n *= d
+                        b += n * _DTYPE_BYTES[dt]
+                    op_bytes += b
+            c.hbm_bytes += op_bytes
+            # flops
+            if ins.op == "dot":
+                c.flops += _dot_flops(ins, shapes)
+            elif ins.op == "convolution":
+                c.flops += _conv_flops(ins, shapes)
+            # collectives
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base in _COLL_OPS:
+                gsize = 0
+                gm = _GROUPS.search(ins.rest)
+                if gm:
+                    gsize = gm.group(1).count(",") + 1
+                else:
+                    gi = _GROUPS_IOTA.search(ins.rest)
+                    if gi:
+                        gsize = int(gi.group(2))
+                c.coll_bytes += ins.out_bytes
+                c.coll_by_kind[base] = (c.coll_by_kind.get(base, 0)
+                                        + ins.out_bytes)
+                key = (base, gsize)
+                c.coll_by_group[key] = (c.coll_by_group.get(key, 0)
+                                        + ins.out_bytes)
+        memo[cname] = c
+        return c
+
+    if entry is None:
+        for cname in comps:   # conventional jax entry name
+            if cname.startswith("main"):
+                entry = cname
+                break
+    if entry is None:  # fall back: the largest computation
+        entry = max(comps, key=lambda c: len(comps[c]))
+    return comp_cost(entry)

@@ -1,0 +1,133 @@
+"""Distributed serving steps: prefill and single-token decode.
+
+Serving is plain auto-sharded jit on the production mesh (no W-HFL —
+OTA aggregation is a training-time feature).  Batch is sharded over the
+data axes, heads/experts/vocab over 'model'.  Decode shapes lower
+`serve_step` — ONE new token against a KV/SSM cache of `seq_len` — per
+the assignment brief; `long_500k` uses the sliding-window variant for
+attention archs (cache size = window) and the O(1) state for SSM/hybrid.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import lm
+from repro.sharding import make_rules, set_rules
+
+
+def _data_axes(mesh):
+    return tuple(a for a in ("pod", "cluster", "user", "data")
+                 if a in mesh.axis_names)
+
+
+def decode_window(cfg: ArchConfig, shape: InputShape) -> Optional[int]:
+    """Sliding window used for attention caches at this shape."""
+    if shape.seq_len > 65536 and cfg.family != "ssm":
+        return cfg.long_context_window
+    return cfg.sliding_window
+
+
+def build_prefill_step(cfg: ArchConfig, shape: InputShape, mesh):
+    rules = make_rules(mesh, fsdp=False, cfg=cfg)
+
+    def prefill_step(params, batch):
+        with set_rules(rules):
+            return lm.prefill_logits(params, batch, cfg)
+
+    def batch_specs():
+        B, L = shape.global_batch, shape.seq_len
+        b = {"tokens": jax.ShapeDtypeStruct((B, L), jnp.int32)}
+        if cfg.family == "vlm":
+            b["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), cfg.cdt())
+        if cfg.family == "encdec":
+            b["src_frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_src_frames, cfg.d_model), cfg.cdt())
+        return b
+
+    da = _data_axes(mesh)
+    def shardings():
+        bspec = jax.tree.map(
+            lambda _: NamedSharding(mesh, P(da)), batch_specs())
+        vax = rules.physical("vocab")
+        return bspec, NamedSharding(mesh, P(da, vax))  # logits [B, vocab]
+
+    return prefill_step, batch_specs, shardings, rules
+
+
+def cache_specs(cfg: ArchConfig, shape: InputShape):
+    """ShapeDtypeStructs for the decode cache at (arch, shape)."""
+    w = decode_window(cfg, shape)
+    return jax.eval_shape(
+        lambda: lm.init_decode_cache(cfg, shape.global_batch, shape.seq_len,
+                                     window=w))
+
+
+def cache_shardings(cfg: ArchConfig, shape: InputShape, mesh):
+    """Batch dim of every cache leaf over the data axes; KV heads over
+    'model' when they divide it, else replicated."""
+    da = _data_axes(mesh)
+    n_model = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    n_data = 1
+    for a in da:
+        n_data *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    B = shape.global_batch
+
+    def leaf_spec(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        shp = leaf.shape
+        batch_ax = da if (B % max(n_data, 1) == 0 and B >= n_data) else None
+        # cache layouts: attn k/v [n_layers(, groups), B, S, KV, hd];
+        # pos [..., B]; ssm h [..., B, H, P, N]; conv [..., B, K-1, C];
+        # enc_out [B, L, D]
+        spec = [None] * len(shp)
+        # find the batch dim: first dim equal to B scanning from the left
+        for i, s in enumerate(shp):
+            if s == B:
+                spec[i] = batch_ax
+                break
+        if names and names[-1] in ("k", "v") and len(shp) >= 2:
+            if shp[-2] % n_model == 0 and shp[-2] >= n_model:
+                spec[-2] = "model"
+        if names and names[-1] == "h" and len(shp) >= 3:
+            if shp[-3] % n_model == 0 and shp[-3] >= n_model:
+                spec[-3] = "model"   # SSM heads
+        return NamedSharding(mesh, P(*spec))
+
+    specs = cache_specs(cfg, shape)
+    return jax.tree_util.tree_map_with_path(leaf_spec, specs)
+
+
+def build_decode_step(cfg: ArchConfig, shape: InputShape, mesh):
+    rules = make_rules(mesh, fsdp=False, cfg=cfg)
+    w = decode_window(cfg, shape)
+
+    def serve_step(params, cache, tokens):
+        with set_rules(rules):
+            logits, new_cache = lm.decode_step(
+                params, cache, {"tokens": tokens}, cfg, window=w)
+            return logits, new_cache
+
+    def token_specs():
+        return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+
+    da = _data_axes(mesh)
+    def shardings():
+        n_data = 1
+        sh = dict(zip(mesh.axis_names, mesh.devices.shape))
+        for a in da:
+            n_data *= sh[a]
+        tok_spec = (P(da) if shape.global_batch % max(n_data, 1) == 0
+                    and shape.global_batch >= n_data else P())
+        vax = rules.physical("vocab")
+        return (NamedSharding(mesh, tok_spec),
+                cache_shardings(cfg, shape, mesh),
+                NamedSharding(mesh, P(tok_spec[0] if tok_spec else None,
+                                      vax)))
+
+    return serve_step, token_specs, shardings, rules

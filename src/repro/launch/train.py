@@ -1,0 +1,438 @@
+"""Distributed W-HFL training step (Mode B: production scale).
+
+Builds a jitted `train_step(state, batch, key) -> (state, metrics)` for
+any assigned architecture on the production mesh, with the paper's
+hierarchical OTA aggregation as a first-class feature:
+
+- Every (pod, cluster, user) mesh coordinate is one W-HFL mobile user;
+  its slice of the global batch is that user's local data.
+- Per round: `tau` local SGD steps per user, OTA cluster hop
+  (psum('user') + equivalent-channel impairments), repeated for `I`
+  cluster iterations, then the OTA global hop across ('pod','cluster').
+  Divergent user/cluster replicas are expressed as *delta buffers* over
+  the shared model-sharded parameters, so tensor/expert parallelism and
+  the local-SGD protocol compose.
+- tau = I = 1 degenerates to per-step hierarchical OTA gradient
+  aggregation; `OTADistConfig(fused=True)` additionally folds both hops
+  into a single flat all-reduce (beyond-paper optimized path) and is
+  compatible with FSDP parameter sharding (`fsdp=True`).
+
+The aggregated delta is applied either directly (paper: theta += Delta)
+or through an outer AdamW ("server optimizer", DiLoCo-style; the paper's
+experiments use Adam at the user level which the theory does not cover —
+we expose both).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core.dist import (DistGeom, OTADistConfig, cluster_hop,
+                             fused_whfl_aggregate, global_hop, uniform_geom,
+                             whfl_aggregate)
+from repro.launch.mesh import mesh_counts, refine_mesh
+from repro.models import lm
+from repro.nn.core import split_params
+from repro.optim import adamw, sgd
+from repro.sharding import Rules, make_rules, param_sharding_tree, set_rules
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    tau: int = 1                   # local user iterations per cluster round
+    I: int = 1                     # cluster iterations per global round
+    users_per_cluster: int = 4
+    eta_local: float = 1e-2        # local SGD step size
+    outer: str = "add"             # "add" (paper) | "adamw" (server opt)
+    outer_lr: float = 3e-4
+    P_t: float = 1.0
+    P_is_t: float = 20.0
+    ota: OTADistConfig = field(default_factory=OTADistConfig)
+    fsdp: bool = False             # shard params over data axes (fused only)
+    moment_dtype: str = "float32"  # "bfloat16" halves optimizer memory
+    grad_accum: int = 1            # microbatches per step (fused path)
+    zero1: bool = False            # shard outer-opt moments over data axes
+    geom: Optional[DistGeom] = None
+    seed: int = 0
+
+
+def _inner_rules(mesh, cfg: ArchConfig) -> Rules:
+    """Logical-axis rules for use INSIDE shard_map (manual pod/cluster/
+    user; only 'model' remains automatic)."""
+    return make_rules(mesh, cfg=cfg, inside_shardmap=True)
+
+
+def outer_rules(mesh, cfg: ArchConfig, *, fsdp: bool) -> Rules:
+    """Rules for jit-level (auto) sharding of params/optimizer state."""
+    return make_rules(mesh, fsdp=fsdp, cfg=cfg)
+
+
+def make_batch(cfg: ArchConfig, shape: InputShape, *, dtype=jnp.int32):
+    """ShapeDtypeStructs for one global training batch."""
+    B, L = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, L), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, L), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), cfg.cdt())
+    if cfg.family == "encdec":
+        batch["src_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_src_frames, cfg.d_model), cfg.cdt())
+    return batch
+
+
+def batch_shardings(cfg: ArchConfig, shape: InputShape, mesh):
+    data_axes = tuple(a for a in ("pod", "cluster", "user", "data")
+                      if a in mesh.axis_names)
+    spec = {
+        "tokens": P(data_axes), "labels": P(data_axes),
+    }
+    if cfg.family == "vlm":
+        spec["patch_embeds"] = P(data_axes)
+    if cfg.family == "encdec":
+        spec["src_frames"] = P(data_axes)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec,
+                        is_leaf=lambda v: isinstance(v, P))
+
+
+def _tree_zeros_f32(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def _symbol_power(delta_tree, P) -> jax.Array:
+    """Paper §V per-complex-symbol transmit power: P^2 * ||flat||^2 / N
+    with N = n_real_params / 2, i.e. 2 P^2 mean(x^2)."""
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+             for l in jax.tree.leaves(delta_tree))
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(delta_tree))
+    return 2.0 * (P ** 2) * sq / float(max(n, 1))
+
+
+def _tree_add(a, b, scale=1.0):
+    return jax.tree.map(
+        lambda x, y: (x.astype(jnp.float32)
+                      + scale * y.astype(jnp.float32)).astype(x.dtype), a, b)
+
+
+def build_train_step(cfg: ArchConfig, shape: InputShape, mesh,
+                     tcfg: TrainConfig = TrainConfig()):
+    """Returns (train_step, init_fn, batch_specs, shardings dict).
+
+    `train_step(state, batch, key)` is ready for jax.jit with the
+    returned in/out shardings; `state = {"params", "opt", "step"}`.
+    """
+    M = tcfg.users_per_cluster
+    rmesh = refine_mesh(mesh, users_per_cluster=M)
+    n_pods, n_clusters, _ = mesh_counts(mesh, M)
+    geom = tcfg.geom or uniform_geom(C=n_clusters, M=M)
+    n_users = n_clusters * M
+    B = shape.global_batch
+    if B % n_users:
+        raise ValueError(f"global batch {B} not divisible by {n_users} users")
+    b_user = B // n_users
+    n_micro = tcfg.I * tcfg.tau
+    if b_user % n_micro:
+        raise ValueError(
+            f"per-user batch {b_user} not divisible by I*tau={n_micro}")
+
+    irules = _inner_rules(rmesh, cfg)
+    orules = outer_rules(rmesh, cfg, fsdp=tcfg.fsdp)
+
+    outer_opt = (adamw(tcfg.outer_lr, weight_decay=0.1,
+                       moment_dtype=jnp.dtype(tcfg.moment_dtype))
+                 if tcfg.outer == "adamw" else sgd(1.0))
+
+    def loss_fn(params, mb):
+        loss, metrics = lm.lm_loss(params, mb, cfg)
+        return loss, metrics
+
+    # ---------------- per-user body (inside shard_map) ----------------
+    def per_user_step(params, opt_state, batch, key, step):
+        with set_rules(irules):
+            # split this user's batch into I x tau microbatches
+            def micro(i, j):
+                s = (i * tcfg.tau + j) * (b_user // n_micro)
+                return jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, s, b_user // n_micro, axis=0), batch)
+
+            grad_fn = jax.grad(loss_fn, has_aux=True)
+
+            def cluster_iter(carry, i):
+                cdelta, loss_acc, pw_acc = carry  # cluster delta vs theta_PS
+                udelta = _tree_zeros_f32(params)
+
+                def user_iter(carry2, j):
+                    ud, lacc = carry2
+                    p_eff = jax.tree.map(
+                        lambda p, cd, u: (p.astype(jnp.float32) + cd + u
+                                          ).astype(p.dtype),
+                        params, cdelta, ud)
+                    g, metrics = grad_fn(p_eff, micro(i, j))
+                    ud = jax.tree.map(
+                        lambda u, gg: u - tcfg.eta_local
+                        * gg.astype(jnp.float32), ud, g)
+                    return (ud, lacc + metrics["ce"]), None
+
+                (udelta, loss_acc), _ = jax.lax.scan(
+                    user_iter, (udelta, loss_acc),
+                    jnp.arange(tcfg.tau))
+                pw_acc = pw_acc + _symbol_power(udelta, tcfg.P_t)
+                # OTA cluster hop of the user deltas
+                k_i = jax.random.fold_in(key, i)
+                est = cluster_hop(udelta, geom, k_i, tcfg.P_t, tcfg.ota)
+                cdelta = jax.tree.map(lambda a, b: a + b, cdelta, est)
+                return (cdelta, loss_acc, pw_acc), None
+
+            if tcfg.tau == 1 and tcfg.I == 1:
+                # degenerate round: hierarchical OTA gradient aggregation
+                g, metrics = grad_fn(params, batch)
+                delta = jax.tree.map(
+                    lambda x: -tcfg.eta_local * x.astype(jnp.float32), g)
+                k = jax.random.fold_in(key, 17)
+                est = whfl_aggregate(
+                    delta, geom, k, tcfg.P_t, tcfg.P_is_t, tcfg.ota)
+                loss_tot = jax.lax.pmean(
+                    metrics["ce"], ("pod", "cluster", "user"))
+                pw_edge = jax.lax.pmean(
+                    _symbol_power(delta, tcfg.P_t),
+                    ("pod", "cluster", "user"))
+            else:
+                (cdelta, loss_acc, pw_edge), _ = jax.lax.scan(
+                    cluster_iter,
+                    (_tree_zeros_f32(params), jnp.zeros((), jnp.float32),
+                     jnp.zeros((), jnp.float32)),
+                    jnp.arange(tcfg.I))
+                k_g = jax.random.fold_in(key, 10_007)
+                est = global_hop(cdelta, geom, k_g, tcfg.P_is_t, tcfg.ota)
+                loss_tot = jax.lax.pmean(
+                    loss_acc / n_micro, ("pod", "cluster", "user"))
+                pw_edge = jax.lax.pmean(
+                    pw_edge / tcfg.I, ("pod", "cluster", "user"))
+
+            # outer update: theta += Delta_hat (paper) or server AdamW
+            if tcfg.outer == "add":
+                new_params = _tree_add(params, est)
+                new_opt = opt_state
+            else:
+                pseudo_grad = jax.tree.map(lambda x: -x, est)
+                upd, new_opt = outer_opt.update(
+                    pseudo_grad, opt_state, params, step)
+                new_params = _tree_add(params, upd)
+
+            metrics_out = {
+                "loss": loss_tot,
+                "edge_power": pw_edge,   # avg per-symbol tx power (paper §V)
+            }
+            return new_params, new_opt, metrics_out
+
+    manual = {"pod", "cluster", "user"}
+    sharded_step = jax.shard_map(
+        per_user_step, mesh=rmesh,
+        in_specs=(P(), P(), P(("pod", "cluster", "user")), P(), P()),
+        out_specs=(P(), P(), P()),
+        axis_names=manual, check_vma=False)
+
+    def train_step(state, batch, key):
+        new_params, new_opt, metrics = sharded_step(
+            state["params"], state["opt"], batch, key, state["step"])
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    # ---------------- init + shardings ----------------
+    def init_fn(key):
+        px = lm.init_params(key, cfg)
+        params, axes = split_params(px)
+        opt = outer_opt.init(params)
+        return {"params": params, "opt": opt,
+                "step": jnp.zeros((), jnp.int32)}, axes
+
+    def shardings(axes_tree):
+        p_sh = param_sharding_tree(axes_tree, orules)
+        # optimizer state mirrors param sharding (adamw: {m, v}); zero1
+        # additionally shards the moments over the data axes.
+        if tcfg.outer == "adamw":
+            if tcfg.zero1:
+                zrules = outer_rules(rmesh, fsdp=True)
+                z_sh = param_sharding_tree(axes_tree, zrules)
+                o_sh = {"m": z_sh, "v": z_sh}
+            else:
+                o_sh = {"m": p_sh, "v": p_sh}
+        else:
+            o_sh = ()
+        rep = NamedSharding(rmesh, P())
+        state_sh = {"params": p_sh, "opt": o_sh, "step": rep}
+        return {
+            "state": state_sh,
+            "batch": batch_shardings(cfg, shape, rmesh),
+            "key": rep,
+            "metrics": {"loss": rep, "edge_power": rep},
+        }
+
+    return train_step, init_fn, shardings, rmesh
+
+
+def abstract_state(cfg: ArchConfig, tcfg: TrainConfig):
+    """(ShapeDtypeStruct state tree, logical-axes tree) — no allocation.
+
+    The logical axes are static metadata on the Px leaves; they are
+    captured during abstract tracing via a closure (strings cannot pass
+    through eval_shape outputs)."""
+    box = {}
+
+    def init(key):
+        px = lm.init_params(key, cfg)
+        params, axes = split_params(px)
+        box["axes"] = axes
+        opt = (adamw(tcfg.outer_lr,
+                     moment_dtype=jnp.dtype(tcfg.moment_dtype)).init(params)
+               if tcfg.outer == "adamw" else ())
+        return {"params": params, "opt": opt,
+                "step": jnp.zeros((), jnp.int32)}
+
+    shapes = jax.eval_shape(init, jax.random.PRNGKey(0))
+    return shapes, box["axes"]
+
+
+# ---------------------------------------------------------------------------
+# Fused FSDP path (beyond-paper): pure auto-sharding jit, per-example
+# loss weights carry the OTA gains, one XLA-scheduled all-reduce.
+# ---------------------------------------------------------------------------
+
+def build_fused_train_step(cfg: ArchConfig, shape: InputShape, mesh,
+                           tcfg: TrainConfig = TrainConfig()):
+    """W-HFL as a weighted-gradient + local-noise layer under plain jit.
+
+    Requires tau = I = 1.  Unlike the structural shard_map path, params
+    may be FSDP-sharded over the data axes (per-layer gathers scheduled
+    by XLA inside the layer scan), which is what makes the 235B/480B MoE
+    architectures fit on a v5e pod.  The per-user OTA gain jitter is a
+    per-user *scalar* here (the per-element refinement needs per-user
+    gradient identity, which FSDP reduce-scatters away); interference
+    noise uses a configured tx-power proxy (see DESIGN.md §Beyond-paper).
+    Channel noise is generated from a replicated key and sharded like
+    the gradients, so emulation adds zero collective traffic.
+    """
+    if tcfg.tau != 1 or tcfg.I != 1:
+        raise ValueError("fused path requires tau = I = 1")
+    M = tcfg.users_per_cluster
+    n_pods, n_clusters, _ = mesh_counts(mesh, M)
+    geom = tcfg.geom or uniform_geom(C=n_clusters, M=M)
+    n_users = n_clusters * M
+    B = shape.global_batch
+    b_user = B // n_users
+    rules = make_rules(mesh, fsdp=tcfg.fsdp, cfg=cfg)
+
+    outer_opt = (adamw(tcfg.outer_lr, weight_decay=0.1,
+                       moment_dtype=jnp.dtype(tcfg.moment_dtype))
+                 if tcfg.outer == "adamw" else sgd(1.0))
+
+    bo = jnp.asarray(geom.beta_own, jnp.float32)          # [C, M]
+    bbc = jnp.asarray(geom.beta_bar_c, jnp.float32)       # [C]
+    bis = jnp.asarray(geom.beta_is, jnp.float32)          # [C]
+    bb = float(geom.beta_bar)
+
+    def train_step(state, batch, key):
+        with set_rules(rules):
+            params, step = state["params"], state["step"]
+            k_u, k_c, k_n = jax.random.split(key, 3)
+            # per-user scalar OTA weights (both hops folded)
+            eps_m = jax.random.normal(k_u, (n_clusters, M)) / np.sqrt(geom.K)
+            eps_c = jax.random.normal(k_c, (n_clusters,)) / np.sqrt(geom.K_ps)
+            W = ((bo / bbc[:, None]) * (1.0 + eps_m)
+                 * ((bis / bb) * (1.0 + eps_c))[:, None])   # [C, M]
+            # per-example weights: example e belongs to user e // b_user
+            w_ex = jnp.repeat(W.reshape(-1), b_user) / b_user   # [B]
+
+            def loss_fn(p, mb, w):
+                return lm.lm_loss(p, mb, cfg, example_weights=w)
+
+            if tcfg.grad_accum > 1:
+                # microbatched accumulation: activation temps shrink by
+                # the accumulation factor (§Perf H3)
+                na = tcfg.grad_accum
+                mbs = jax.tree.map(
+                    lambda x: x.reshape((na, B // na) + x.shape[1:]), batch)
+                wb = w_ex.reshape(na, B // na)
+
+                def acc_body(carry, inp):
+                    gacc, lacc = carry
+                    mb, w = inp
+                    (l, m), gi = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mb, w)
+                    gacc = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), gacc, gi)
+                    return (gacc, lacc + m["ce"] / na), None
+
+                g0 = jax.tree.map(
+                    lambda x: jnp.zeros(x.shape, jnp.float32), params)
+                (g, ce), _ = jax.lax.scan(
+                    acc_body, (g0, jnp.zeros((), jnp.float32)), (mbs, wb))
+                metrics = {"ce": ce}
+            else:
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch, w_ex)
+            delta = jax.tree.map(
+                lambda x: -tcfg.eta_local * x.astype(jnp.float32), g)
+
+            # channel noise: thermal (exact) + interference (proxy power)
+            pw = tcfg.ota.tx_power_proxy
+            v_c = geom.sigma_z2 / (geom.K * (tcfg.P_t ** 2)
+                                   * geom.sigma_h2 * bbc)
+            if tcfg.ota.interference and pw is not None:
+                v_c = v_c + (jnp.sum(bo * (bbc[:, None] - bo), axis=1) * pw
+                             / (geom.K * bbc ** 2))
+            v_tot = (jnp.sum((bis / bb) ** 2 * v_c)
+                     + geom.sigma_z2 / (geom.K_ps * (tcfg.P_is_t ** 2)
+                                        * geom.sigma_h2 * bb))
+            std = jnp.sqrt(v_tot / 2.0)
+
+            leaves, treedef = jax.tree.flatten(delta)
+            keys = jax.random.split(k_n, len(leaves))
+            noisy = [l + std * jax.random.normal(kk, l.shape, jnp.float32)
+                     for kk, l in zip(keys, leaves)]
+            est = jax.tree.unflatten(treedef, noisy)
+
+            if tcfg.outer == "add":
+                new_params = _tree_add(params, est)
+                new_opt = state["opt"]
+            else:
+                pseudo_grad = jax.tree.map(lambda x: -x, est)
+                upd, new_opt = outer_opt.update(
+                    pseudo_grad, state["opt"], params, step)
+                new_params = _tree_add(params, upd)
+
+            new_state = {"params": new_params, "opt": new_opt,
+                         "step": step + 1}
+            return new_state, {"loss": metrics["ce"],
+                               "edge_power": _symbol_power(delta, tcfg.P_t)}
+
+    def init_fn(key):
+        px = lm.init_params(key, cfg)
+        params, axes = split_params(px)
+        opt = outer_opt.init(params)
+        return {"params": params, "opt": opt,
+                "step": jnp.zeros((), jnp.int32)}, axes
+
+    def shardings(axes_tree):
+        p_sh = param_sharding_tree(axes_tree, rules)
+        o_sh = ({"m": p_sh, "v": p_sh} if tcfg.outer == "adamw" else ())
+        rep = NamedSharding(mesh, P())
+        return {
+            "state": {"params": p_sh, "opt": o_sh, "step": rep},
+            "batch": batch_shardings(cfg, shape, mesh),
+            "key": rep,
+            "metrics": {"loss": rep, "edge_power": rep},
+        }
+
+    return train_step, init_fn, shardings, mesh

@@ -1,0 +1,3 @@
+from repro.models import lm, paper_models
+
+__all__ = ["lm", "paper_models"]

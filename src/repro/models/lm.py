@@ -1,0 +1,436 @@
+"""Unified LM over the assigned architecture families.
+
+Families: dense (GQA), moe (top-k experts, optional dense residual),
+ssm (Mamba2/SSD), hybrid (Zamba2: Mamba2 + shared attention blocks),
+encdec (SeamlessM4T backbone), vlm (LLaVA-NeXT LM backbone + stubbed
+vision frontend).
+
+All stacks scan over layers with stacked params to keep HLO size and
+compile time bounded for the 94-layer configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import attention, core, mlp, ssm
+from repro.nn.core import Px
+from repro.sharding import logical
+
+
+# ---------------------------------------------------------------------------
+# Param construction
+# ---------------------------------------------------------------------------
+
+def _is_px(v):
+    return isinstance(v, Px)
+
+
+def _stack_layers(key, n: int, init_fn):
+    keys = jax.random.split(key, n)
+    ps = [init_fn(k) for k in keys]
+    return jax.tree.map(
+        lambda *xs: Px(jnp.stack([x.value for x in xs]),
+                       ("layers",) + xs[0].axes),
+        *ps, is_leaf=_is_px)
+
+
+def _attn_cfg(cfg: ArchConfig, window: Optional[int] = None) -> attention.AttnConfig:
+    return attention.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.head_dim, qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+        rope_style=cfg.rope_style, rope_theta=cfg.rope_theta,
+        window=window if window is not None else cfg.sliding_window,
+        q_block=cfg.q_block, impl=cfg.attn_impl, scores_f32=cfg.scores_f32,
+        kv_block=cfg.kv_block, seq_shard=cfg.seq_shard_attn)
+
+
+def _moe_cfg(cfg: ArchConfig) -> mlp.MoEConfig:
+    return mlp.MoEConfig(
+        d_model=cfg.d_model, d_ff_expert=cfg.d_ff_expert,
+        n_experts=cfg.n_experts, top_k=cfg.top_k,
+        capacity_factor=cfg.capacity_factor,
+        dense_residual_ff=cfg.dense_residual_ff,
+        token_shard=cfg.moe_token_shard, dispatch=cfg.moe_dispatch)
+
+
+def _ssm_cfg(cfg: ArchConfig) -> ssm.SSMConfig:
+    return ssm.SSMConfig(
+        d_model=cfg.d_model, d_state=cfg.ssm_state,
+        head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand, chunk=cfg.ssm_chunk)
+
+
+def _init_tblock(key, cfg: ArchConfig, *, cross: bool = False):
+    """One transformer block: ln1+attn [+lnx+xattn] +ln2+ffn."""
+    ks = jax.random.split(key, 4)
+    dt = cfg.pdt()
+    p = {
+        "ln1": core.rmsnorm_init(cfg.d_model, dtype=dt),
+        "attn": attention.init(ks[0], _attn_cfg(cfg), dtype=dt),
+        "ln2": core.rmsnorm_init(cfg.d_model, dtype=dt),
+    }
+    if cfg.n_experts and not cross:
+        p["moe"] = mlp.moe_init(ks[1], _moe_cfg(cfg), dtype=dt)
+    else:
+        p["mlp"] = mlp.swiglu_init(ks[1], cfg.d_model, cfg.d_ff, dtype=dt)
+    if cross:
+        p["lnx"] = core.rmsnorm_init(cfg.d_model, dtype=dt)
+        p["xattn"] = attention.init(ks[2], _attn_cfg(cfg), dtype=dt)
+    return p
+
+
+def _init_sblock(key, cfg: ArchConfig):
+    dt = cfg.pdt()
+    return {
+        "ln": core.rmsnorm_init(cfg.d_model, dtype=dt),
+        "ssm": ssm.init(key, _ssm_cfg(cfg), dtype=dt),
+    }
+
+
+def init_params(key, cfg: ArchConfig):
+    """Returns a Px tree (use nn.core.split_params to get values/axes)."""
+    k_emb, k_layers, k_head, k_extra = jax.random.split(key, 4)
+    dt = cfg.pdt()
+    p: Dict[str, Any] = {
+        "embed": core.embedding_init(k_emb, cfg.vocab, cfg.d_model, dtype=dt),
+        "final_norm": core.rmsnorm_init(cfg.d_model, dtype=dt),
+        "lm_head": core.dense_init(k_head, cfg.d_model, cfg.vocab,
+                                   axes=("p_embed", "p_vocab"), dtype=dt),
+    }
+    fam = cfg.family
+    if fam in ("dense", "vlm", "moe"):
+        p["layers"] = _stack_layers(
+            k_layers, cfg.n_layers, lambda k: _init_tblock(k, cfg))
+    elif fam == "ssm":
+        p["layers"] = _stack_layers(
+            k_layers, cfg.n_layers, lambda k: _init_sblock(k, cfg))
+    elif fam == "hybrid":
+        every = cfg.shared_attn_every
+        n_groups, tail = divmod(cfg.n_layers, every)
+        kg, kt, ksh = jax.random.split(k_layers, 3)
+        p["groups"] = _stack_layers(
+            kg, n_groups,
+            lambda k: _stack_layers(k, every, lambda k2: _init_sblock(k2, cfg)))
+        if tail:
+            p["tail"] = _stack_layers(
+                kt, tail, lambda k: _init_sblock(k, cfg))
+        p["shared"] = _init_tblock(ksh, cfg)
+    elif fam == "encdec":
+        ke, kd = jax.random.split(k_layers)
+        p["enc_layers"] = _stack_layers(
+            ke, cfg.n_enc_layers, lambda k: _init_tblock(k, cfg))
+        p["layers"] = _stack_layers(
+            kd, cfg.n_layers, lambda k: _init_tblock(k, cfg, cross=True))
+        p["enc_norm"] = core.rmsnorm_init(cfg.d_model, dtype=dt)
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Blocks (value params, not Px)
+# ---------------------------------------------------------------------------
+
+def _tblock_fwd(p, x, positions, cfg: ArchConfig, acfg, *, enc_out=None,
+                enc_pos=None):
+    h = attention.prefill(p["attn"], core.rmsnorm(p["ln1"], x), positions, acfg)
+    x = x + h
+    if "xattn" in p:
+        h = _cross_attn(p["xattn"], core.rmsnorm(p["lnx"], x), enc_out,
+                        positions, enc_pos, acfg)
+        x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    hin = core.rmsnorm(p["ln2"], x)
+    if "moe" in p:
+        h, aux = mlp.moe(p["moe"], hin, _moe_cfg(cfg))
+    else:
+        h = mlp.swiglu(p["mlp"], hin)
+    return x + h, aux
+
+
+def _cross_attn(p, x, enc_out, positions, enc_pos, acfg: attention.AttnConfig):
+    """Full (non-causal) attention of decoder queries over encoder output."""
+    B, L, _ = x.shape
+    H, KV, hd = acfg.n_heads, acfg.n_kv_heads, acfg.head_dim
+    q = core.dense(p["wq"], x).reshape(B, L, H, hd)
+    k = core.dense(p["wk"], enc_out).reshape(B, enc_out.shape[1], KV, hd)
+    v = core.dense(p["wv"], enc_out).reshape(B, enc_out.shape[1], KV, hd)
+    mask = jnp.ones((B, L, enc_out.shape[1]), bool)
+    out = attention._sdpa(q, k, v, mask, acfg)
+    return core.dense(p["wo"], out)
+
+
+def _tblock_decode(p, x, cache, cfg: ArchConfig, acfg, *, enc_out=None):
+    h, new_cache = attention.decode(p["attn"], core.rmsnorm(p["ln1"], x),
+                                    cache, acfg)
+    x = x + h
+    if "xattn" in p:
+        h = _cross_attn(p["xattn"], core.rmsnorm(p["lnx"], x), enc_out,
+                        None, None, acfg)
+        x = x + h
+    hin = core.rmsnorm(p["ln2"], x)
+    if "moe" in p:
+        h, _ = mlp.moe(p["moe"], hin, _moe_cfg(cfg))
+    else:
+        h = mlp.swiglu(p["mlp"], hin)
+    return x + h, new_cache
+
+
+def _sblock_fwd(p, x, cfg: ArchConfig):
+    return x + ssm.prefill(p["ssm"], core.rmsnorm(p["ln"], x), _ssm_cfg(cfg))
+
+
+def _sblock_decode(p, x, cache, cfg: ArchConfig):
+    h, new_cache = ssm.decode(p["ssm"], core.rmsnorm(p["ln"], x), cache,
+                              _ssm_cfg(cfg))
+    return x + h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _embed_inputs(params, batch, cfg: ArchConfig):
+    """Token embed + modality stitching. Returns (x, positions)."""
+    cdt = cfg.cdt()
+    tokens = batch["tokens"]
+    x = core.embed(params["embed"], tokens, dtype=cdt)
+    if cfg.family == "vlm":
+        pe = batch["patch_embeds"].astype(cdt)  # [B, n_patches, D] (stub frontend)
+        x = jnp.concatenate([pe, x], axis=1)
+    B, L, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (B, L))
+    x = logical(x, "batch", "seq", "embed")
+    return x, positions
+
+
+def _encode(params, batch, cfg: ArchConfig):
+    """Encoder stack over stubbed frame embeddings [B, Ls, D]."""
+    cdt = cfg.cdt()
+    x = batch["src_frames"].astype(cdt)
+    B, Ls, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(Ls, dtype=jnp.int32)[None], (B, Ls))
+    acfg = dataclasses.replace(_attn_cfg(cfg), causal=False)  # bidirectional
+
+    def body(h, lp):
+        h2 = attention.prefill(lp["attn"], core.rmsnorm(lp["ln1"], h), pos,
+                               acfg)
+        h = h + h2
+        h = h + mlp.swiglu(lp["mlp"], core.rmsnorm(lp["ln2"], h))
+        return h, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["enc_layers"])
+    return core.rmsnorm(params["enc_norm"], x), pos
+
+
+def backbone(params, batch, cfg: ArchConfig):
+    """Runs the stack, returns (hidden [B, L, D], aux_loss)."""
+    x, positions = _embed_inputs(params, batch, cfg)
+    fam = cfg.family
+    aux_total = jnp.zeros((), jnp.float32)
+    acfg = _attn_cfg(cfg)
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(h, lp):
+            h, aux = _tblock_fwd(lp, h, positions, cfg, acfg)
+            return h, aux
+        x, auxs = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+        aux_total += auxs.sum()
+    elif fam == "ssm":
+        def body(h, lp):
+            return _sblock_fwd(lp, h, cfg), None
+        x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+    elif fam == "hybrid":
+        shared = params["shared"]
+
+        def group_body(h, gp):
+            def inner(h2, lp):
+                return _sblock_fwd(lp, h2, cfg), None
+            h, _ = jax.lax.scan(inner, h, gp)
+            h, _ = _tblock_fwd(shared, h, positions, cfg, acfg)
+            return h, None
+        x, _ = jax.lax.scan(_maybe_remat(group_body, cfg), x, params["groups"])
+        if "tail" in params:
+            def tail_body(h, lp):
+                return _sblock_fwd(lp, h, cfg), None
+            x, _ = jax.lax.scan(_maybe_remat(tail_body, cfg), x, params["tail"])
+    elif fam == "encdec":
+        enc_out, enc_pos = _encode(params, batch, cfg)
+
+        def body(h, lp):
+            h, aux = _tblock_fwd(lp, h, positions, cfg, acfg,
+                                 enc_out=enc_out, enc_pos=enc_pos)
+            return h, aux
+        x, auxs = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+        aux_total += auxs.sum()
+    else:
+        raise ValueError(fam)
+
+    x = core.rmsnorm(params["final_norm"], x)
+    return x, aux_total
+
+
+def lm_loss(params, batch, cfg: ArchConfig, *, loss_block: int = 256,
+            example_weights=None):
+    """Next-token CE loss, computed in sequence blocks to bound the
+    logits working set (vocab up to 256k).
+
+    `example_weights` ([B], summing to ~1) reweights per-example losses;
+    used by the fused W-HFL path to fold per-user OTA gains into the
+    gradient (grad of the weighted loss == the OTA-weighted sum of
+    per-user gradients).  Default: uniform 1/B.
+    """
+    hidden, aux = backbone(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # image positions carry no LM loss
+        hidden = hidden[:, batch["patch_embeds"].shape[1]:, :]
+    B, L, D = hidden.shape
+    w = params["lm_head"]["w"]
+    LB = min(loss_block, L)
+    nb = L // LB
+    hb = hidden[:, : nb * LB].reshape(B, nb, LB, D).swapaxes(0, 1)
+    lb = labels[:, : nb * LB].reshape(B, nb, LB).swapaxes(0, 1)
+
+    @jax.checkpoint  # recompute block logits in backward (vocab-sized)
+    def body(acc, inp):
+        h, y = inp
+        logits = (h @ w.astype(h.dtype)).astype(jnp.float32)
+        logits = logical(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold, axis=-1), None   # per-example [B]
+
+    per_ex, _ = jax.lax.scan(body, jnp.zeros((B,), jnp.float32), (hb, lb))
+    per_ex = per_ex / (nb * LB)                           # per-token mean
+    ce_mean = per_ex.mean()
+    if example_weights is None:
+        loss = ce_mean
+    else:
+        loss = jnp.sum(per_ex * example_weights.astype(jnp.float32))
+    return loss + 0.01 * aux, {"ce": ce_mean, "aux": aux}
+
+
+def prefill_logits(params, batch, cfg: ArchConfig):
+    """Prefill forward; returns last-position logits [B, vocab]."""
+    hidden, _ = backbone(params, batch, cfg)
+    last = hidden[:, -1, :]
+    logits = last @ params["lm_head"]["w"].astype(last.dtype)
+    return logical(logits.astype(jnp.float32), "batch", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token against caches)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ArchConfig, batch: int, seq_len: int, *,
+                      window: Optional[int] = None):
+    """Cache pytree for `decode_step` (zeros; dry-run uses eval_shape)."""
+    cdt = cfg.cdt()
+    fam = cfg.family
+    acfg = _attn_cfg(cfg, window=window)
+    scfg = _ssm_cfg(cfg)
+
+    def attn_caches(n):
+        one = attention.init_cache(batch, acfg, seq_len, dtype=cdt,
+                                   prefilled=seq_len - 1)
+        return jax.tree.map(lambda v: jnp.broadcast_to(v, (n,) + v.shape), one)
+
+    if fam in ("dense", "vlm", "moe"):
+        return {"attn": attn_caches(cfg.n_layers)}
+    if fam == "ssm":
+        one = ssm.init_cache(batch, scfg, dtype=cdt)
+        return {"ssm": jax.tree.map(
+            lambda v: jnp.broadcast_to(v, (cfg.n_layers,) + v.shape), one)}
+    if fam == "hybrid":
+        every = cfg.shared_attn_every
+        n_groups, tail = divmod(cfg.n_layers, every)
+        one = ssm.init_cache(batch, scfg, dtype=cdt)
+        caches = {
+            "ssm_groups": jax.tree.map(
+                lambda v: jnp.broadcast_to(v, (n_groups, every) + v.shape), one),
+            "attn": attn_caches(n_groups),
+        }
+        if tail:
+            caches["ssm_tail"] = jax.tree.map(
+                lambda v: jnp.broadcast_to(v, (tail,) + v.shape), one)
+        return caches
+    if fam == "encdec":
+        enc_len = min(cfg.enc_src_frames, seq_len)
+        return {
+            "attn": attn_caches(cfg.n_layers),
+            "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), cdt),
+        }
+    raise ValueError(fam)
+
+
+def decode_step(params, cache, batch, cfg: ArchConfig, *,
+                window: Optional[int] = None):
+    """One-token decode. batch: {"tokens": [B, 1]}. Returns (logits, cache)."""
+    cdt = cfg.cdt()
+    x = core.embed(params["embed"], batch["tokens"], dtype=cdt)
+    x = logical(x, "batch", "seq", "embed")
+    fam = cfg.family
+    acfg = _attn_cfg(cfg, window=window)
+    new_cache = dict(cache)
+
+    if fam in ("dense", "vlm", "moe"):
+        def body(h, lp_cache):
+            lp, c = lp_cache
+            h, nc = _tblock_decode(lp, h, c, cfg, acfg)
+            return h, nc
+        x, nc = jax.lax.scan(body, x, (params["layers"], cache["attn"]))
+        new_cache["attn"] = nc
+    elif fam == "ssm":
+        def body(h, lp_cache):
+            lp, c = lp_cache
+            h, nc = _sblock_decode(lp, h, c, cfg)
+            return h, nc
+        x, nc = jax.lax.scan(body, x, (params["layers"], cache["ssm"]))
+        new_cache["ssm"] = nc
+    elif fam == "hybrid":
+        shared = params["shared"]
+
+        def group_body(h, inp):
+            gp, sc, ac = inp
+
+            def inner(h2, lp_c):
+                lp, c = lp_c
+                return _sblock_decode(lp, h2, c, cfg)
+            h, nsc = jax.lax.scan(inner, h, (gp, sc))
+            h, nac = _tblock_decode(shared, h, ac, cfg, acfg)
+            return h, (nsc, nac)
+        x, (nsc, nac) = jax.lax.scan(
+            group_body, x,
+            (params["groups"], cache["ssm_groups"], cache["attn"]))
+        new_cache["ssm_groups"], new_cache["attn"] = nsc, nac
+        if "tail" in params:
+            def tail_body(h, lp_c):
+                lp, c = lp_c
+                return _sblock_decode(lp, h, c, cfg)
+            x, ntc = jax.lax.scan(tail_body, x,
+                                  (params["tail"], cache["ssm_tail"]))
+            new_cache["ssm_tail"] = ntc
+    elif fam == "encdec":
+        enc_out = cache["enc_out"]
+
+        def body(h, lp_cache):
+            lp, c = lp_cache
+            h, nc = _tblock_decode(lp, h, c, cfg, acfg, enc_out=enc_out)
+            return h, nc
+        x, nc = jax.lax.scan(body, x, (params["layers"], cache["attn"]))
+        new_cache["attn"] = nc
+    else:
+        raise ValueError(fam)
+
+    x = core.rmsnorm(params["final_norm"], x)[:, 0, :]
+    logits = x @ params["lm_head"]["w"].astype(x.dtype)
+    return logical(logits.astype(jnp.float32), "batch", "vocab"), new_cache

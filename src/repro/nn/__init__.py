@@ -1,0 +1,30 @@
+from repro.nn.core import (
+    Px,
+    split_params,
+    dense,
+    dense_init,
+    rmsnorm,
+    rmsnorm_init,
+    layernorm,
+    layernorm_init,
+    embedding_init,
+    embed,
+)
+from repro.nn import rope, attention, mlp, ssm
+
+__all__ = [
+    "Px",
+    "split_params",
+    "dense",
+    "dense_init",
+    "rmsnorm",
+    "rmsnorm_init",
+    "layernorm",
+    "layernorm_init",
+    "embedding_init",
+    "embed",
+    "rope",
+    "attention",
+    "mlp",
+    "ssm",
+]

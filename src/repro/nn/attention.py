@@ -1,0 +1,246 @@
+"""GQA attention: prefill (query-block-scanned) + single-token decode.
+
+Features per the assigned architecture pool: grouped KV heads, optional
+QKV bias (Qwen2), optional qk RMSNorm (Qwen3), NeoX / partial ("2-D",
+ChatGLM) RoPE, optional sliding window (long-context variants).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import core
+from repro.nn.core import Px
+from repro.nn.rope import apply_rope
+from repro.sharding import logical
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_style: str = "neox"  # "neox" | "partial" | "none"
+    rope_theta: float = 10000.0
+    window: Optional[int] = None  # sliding window (None = full causal)
+    causal: bool = True  # False -> bidirectional (encoder stacks)
+    q_block: int = 512  # query block size for scanned prefill
+    # perf knobs (EXPERIMENTS.md §Perf): "blocked" materializes one
+    # q-block of scores; "online" additionally blocks the KV axis with a
+    # running (max, denom) — flash-attention recurrence in XLA.
+    impl: str = "blocked"
+    scores_f32: bool = True
+    kv_block: int = 1024
+    seq_shard: bool = False   # shard q-seq over 'model' (heads unshardable)
+
+
+def init(key, cfg: AttnConfig, dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": core.dense_init(kq, D, H * hd, bias=cfg.qkv_bias,
+                              axes=("p_embed", "p_heads"), dtype=dtype),
+        "wk": core.dense_init(kk, D, KV * hd, bias=cfg.qkv_bias,
+                              axes=("p_embed", "p_kv_heads"), dtype=dtype),
+        "wv": core.dense_init(kv, D, KV * hd, bias=cfg.qkv_bias,
+                              axes=("p_embed", "p_kv_heads"), dtype=dtype),
+        "wo": core.dense_init(ko, H * hd, D, axes=("p_heads", "p_embed"),
+                              dtype=dtype, scale=1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = core.rmsnorm_init(hd, axes=("head_dim",), dtype=dtype)
+        p["k_norm"] = core.rmsnorm_init(hd, axes=("head_dim",), dtype=dtype)
+    return p
+
+
+def _qkv(p, x, positions, cfg: AttnConfig):
+    B, L, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = core.dense(p["wq"], x).reshape(B, L, H, hd)
+    k = core.dense(p["wk"], x).reshape(B, L, KV, hd)
+    v = core.dense(p["wv"], x).reshape(B, L, KV, hd)
+    if cfg.qk_norm:
+        q = core.rmsnorm(p["q_norm"], q)
+        k = core.rmsnorm(p["k_norm"], k)
+    if cfg.rope_style != "none":
+        q = apply_rope(q, positions, theta=cfg.rope_theta, style=cfg.rope_style)
+        k = apply_rope(k, positions, theta=cfg.rope_theta, style=cfg.rope_style)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: AttnConfig):
+    """q: [B,Lq,H,hd]; k,v: [B,S,KV,hd]; mask: [B,Lq,S] bool (True=keep)."""
+    B, Lq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Lq, KV, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("blkgd,bskd->bklgs", qg, k) * scale
+    # mask [B,Lq,S] -> broadcast to [B,KV,Lq,G,S] score layout [b,k,l,g,s]
+    if cfg.scores_f32:
+        scores = scores.astype(jnp.float32)
+        scores = jnp.where(mask[:, None, :, None, :], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    else:
+        # bf16 scores: subtract the (f32) row max first, exp/sum in bf16 —
+        # halves the dominant score-materialization traffic (§Perf H1.1)
+        scores = jnp.where(mask[:, None, :, None, :], scores,
+                           jnp.asarray(NEG_INF, scores.dtype))
+        mx = jnp.max(scores.astype(jnp.float32), axis=-1, keepdims=True)
+        e = jnp.exp(scores - mx.astype(scores.dtype))
+        w = (e / jnp.sum(e.astype(jnp.float32), -1,
+                         keepdims=True).astype(e.dtype)).astype(q.dtype)
+    out = jnp.einsum("bklgs,bskd->blkgd", w, v)
+    return out.reshape(B, Lq, H * hd)
+
+
+def _sdpa_online(q, k, v, q_pos, k_pos, cfg: AttnConfig):
+    """Flash-style kv-blocked attention: scores for ONE (q-block,
+    kv-block) tile exist at a time; running max/denominator recurrence.
+    q: [B,Lq,H,hd]; k,v: [B,S,KV,hd].  Returns [B, Lq, H*hd]."""
+    B, Lq, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    KB = min(cfg.kv_block, S)
+    pad = (-S) % KB
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+    nb = (S + pad) // KB
+    qg = q.reshape(B, Lq, KV, G, hd)
+    scale = 1.0 / math.sqrt(hd)
+    kb = k.reshape(B, nb, KB, KV, hd).swapaxes(0, 1)
+    vb = v.reshape(B, nb, KB, KV, hd).swapaxes(0, 1)
+    pb = k_pos.reshape(B, nb, KB).swapaxes(0, 1)
+
+    def body(carry, inp):
+        acc, mx, den = carry                     # [B,KV,Lq,G,hd],[...,1]
+        kt, vt, pt = inp
+        s = (jnp.einsum("blkgd,bskd->bklgs", qg, kt) * scale
+             ).astype(jnp.float32)
+        mask = _causal_mask(q_pos, pt, cfg.window, cfg.causal)
+        mask &= (pt >= 0)[:, None, :]
+        s = jnp.where(mask[:, None, :, None, :], s, NEG_INF)
+        mx_new = jnp.maximum(mx, s.max(-1, keepdims=True))
+        corr = jnp.exp(mx - mx_new)
+        e = jnp.exp(s - mx_new)
+        den = den * corr + e.sum(-1, keepdims=True)
+        acc = (acc * corr
+               + jnp.einsum("bklgs,bskd->bklgd", e.astype(q.dtype),
+                            vt).astype(jnp.float32))
+        return (acc, mx_new, den), None
+
+    acc0 = jnp.zeros((B, KV, Lq, G, hd), jnp.float32)
+    mx0 = jnp.full((B, KV, Lq, G, 1), NEG_INF, jnp.float32)
+    den0 = jnp.zeros((B, KV, Lq, G, 1), jnp.float32)
+    (acc, mx, den), _ = jax.lax.scan(body, (acc0, mx0, den0), (kb, vb, pb))
+    out = (acc / jnp.maximum(den, 1e-30)).astype(q.dtype)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, Lq, H * hd)
+
+
+def _causal_mask(q_pos, k_pos, window: Optional[int], causal: bool = True):
+    """q_pos [B,Lq], k_pos [B,S] -> bool mask [B,Lq,S]."""
+    if causal:
+        m = k_pos[:, None, :] <= q_pos[:, :, None]
+    else:
+        m = jnp.ones((q_pos.shape[0], q_pos.shape[1], k_pos.shape[1]), bool)
+    if window is not None:
+        m &= jnp.abs(q_pos[:, :, None] - k_pos[:, None, :]) < window
+    return m
+
+
+def prefill(p, x, positions, cfg: AttnConfig):
+    """Full-sequence causal attention; scans over query blocks when long.
+
+    x: [B, L, D]; positions: [B, L]. Returns [B, L, D].
+    """
+    B, L, _ = x.shape
+    q, k, v = _qkv(p, x, positions, cfg)
+    q_seq = "q_seq" if cfg.seq_shard else "seq"
+    q = logical(q, "batch", q_seq, "heads", "head_dim")
+    k = logical(k, "batch", "seq", "kv_heads", "head_dim")
+    v = logical(v, "batch", "seq", "kv_heads", "head_dim")
+    QB = cfg.q_block
+    if L <= QB:
+        if cfg.impl == "online":
+            out = _sdpa_online(q, k, v, positions, positions, cfg)
+        else:
+            mask = _causal_mask(positions, positions, cfg.window, cfg.causal)
+            out = _sdpa(q, k, v, mask, cfg)
+    else:
+        pad = (-L) % QB
+        qp, pp = q, positions
+        if pad:
+            qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            pp = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1)
+        Lp = L + pad
+        nb = Lp // QB
+        qb = qp.reshape(B, nb, QB, *q.shape[2:]).swapaxes(0, 1)
+        pb = pp.reshape(B, nb, QB).swapaxes(0, 1)
+
+        @jax.checkpoint  # recompute block scores/softmax in backward:
+        # saving them costs O(L * S) f32 per layer, remat makes it O(QB * S)
+        def body(_, qp):
+            qi, pi = qp
+            qi = logical(qi, "batch", q_seq, "heads", "head_dim")
+            if cfg.impl == "online":
+                return None, _sdpa_online(qi, k, v, pi, positions, cfg)
+            mask = _causal_mask(pi, positions, cfg.window, cfg.causal)
+            return None, _sdpa(qi, k, v, mask, cfg)
+
+        _, ob = jax.lax.scan(body, None, (qb, pb))
+        out = ob.swapaxes(0, 1).reshape(B, Lp, -1)[:, :L]
+    out = logical(out, "batch", q_seq, None)
+    return core.dense(p["wo"], out)
+
+
+def decode(p, x, cache, cfg: AttnConfig):
+    """Single-token decode against a KV cache.
+
+    x: [B, 1, D]. cache: {"k","v": [B, S, KV, hd], "pos": [B] int32 count
+    of tokens already in the cache}.  With a sliding window, S == window
+    and slots are written round-robin.
+    """
+    B = x.shape[0]
+    S = cache["k"].shape[1]
+    pos = cache["pos"]  # [B]
+    q, k, v = _qkv(p, x, pos[:, None], cfg)
+    slot = pos % S if cfg.window is not None else jnp.minimum(pos, S - 1)
+    oh = jax.nn.one_hot(slot, S, dtype=k.dtype)  # [B, S]
+    new_k = cache["k"] * (1 - oh)[:, :, None, None] + oh[:, :, None, None] * k
+    new_v = cache["v"] * (1 - oh)[:, :, None, None] + oh[:, :, None, None] * v
+    # positions held in each slot
+    slot_idx = jnp.arange(S, dtype=jnp.int32)[None, :]
+    if cfg.window is not None:
+        # slot i holds the latest position p <= pos with p % S == i
+        cur = pos[:, None]
+        k_pos = cur - ((cur - slot_idx) % S)
+        valid = k_pos >= jnp.maximum(0, cur - (S - 1))
+        k_pos = jnp.where(valid, k_pos, -1)
+    else:
+        k_pos = jnp.where(slot_idx <= pos[:, None], slot_idx, -1)
+    mask = (k_pos >= 0)[:, None, :]  # [B,1,S]
+    out = _sdpa(q, new_k, new_v, mask, cfg)
+    y = core.dense(p["wo"], out)
+    return y, {"k": new_k, "v": new_v, "pos": pos + 1}
+
+
+def init_cache(batch: int, cfg: AttnConfig, seq_len: int, dtype=jnp.bfloat16,
+               prefilled: int = 0):
+    S = min(seq_len, cfg.window) if cfg.window is not None else seq_len
+    shape = (batch, S, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.full((batch,), prefilled, jnp.int32),
+    }

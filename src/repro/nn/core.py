@@ -1,0 +1,100 @@
+"""Minimal functional NN library (pure JAX, no flax).
+
+Parameters are plain pytrees of arrays.  During init, leaves are `Px`
+(array + logical sharding axes); `split_params` separates the two trees
+so the launcher can build NamedShardings for every parameter.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Px(NamedTuple):
+    value: jax.Array
+    axes: Tuple[Optional[str], ...]
+
+
+def _is_px(v) -> bool:
+    return isinstance(v, Px)
+
+
+def split_params(tree):
+    """Split a Px-leafed tree into (params, logical_axes) trees."""
+    params = jax.tree.map(lambda p: p.value, tree, is_leaf=_is_px)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=_is_px)
+    return params, axes
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(
+    key,
+    d_in: int,
+    d_out: int,
+    *,
+    bias: bool = False,
+    axes: Tuple[Optional[str], Optional[str]] = ("p_embed", "p_ffn"),
+    dtype=jnp.float32,
+    scale: Optional[float] = None,
+):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": Px(_normal(key, (d_in, d_out), scale, dtype), axes)}
+    if bias:
+        p["b"] = Px(jnp.zeros((d_out,), dtype), (axes[1],))
+    return p
+
+
+def dense(p, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def rmsnorm_init(d: int, *, axes=("embed",), dtype=jnp.float32):
+    return {"scale": Px(jnp.ones((d,), dtype), axes)}
+
+
+def rmsnorm(p, x: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, *, axes=("embed",), dtype=jnp.float32):
+    return {
+        "scale": Px(jnp.ones((d,), dtype), axes),
+        "bias": Px(jnp.zeros((d,), dtype), axes),
+    }
+
+
+def layernorm(p, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def embedding_init(key, vocab: int, d: int, *, dtype=jnp.float32):
+    return {"table": Px(_normal(key, (vocab, d), 0.02, dtype), ("p_vocab", "embed"))}
+
+
+def embed(p, ids: jax.Array, dtype=None) -> jax.Array:
+    t = p["table"]
+    if dtype is not None:
+        t = t.astype(dtype)
+    return jnp.take(t, ids, axis=0)

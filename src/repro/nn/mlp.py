@@ -1,0 +1,196 @@
+"""Feed-forward blocks: SwiGLU MLP and capacity-based top-k MoE."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import core
+from repro.nn.core import Px
+from repro.sharding import logical
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": core.dense_init(k1, d_model, d_ff, axes=("p_embed", "p_ffn"), dtype=dtype),
+        "w_up": core.dense_init(k2, d_model, d_ff, axes=("p_embed", "p_ffn"), dtype=dtype),
+        "w_down": core.dense_init(k3, d_ff, d_model, axes=("p_ffn", "p_embed"), dtype=dtype),
+    }
+
+
+def swiglu(p, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(core.dense(p["w_gate"], x))
+    u = core.dense(p["w_up"], x)
+    h = logical(g * u, "batch", "seq", "ffn")
+    return core.dense(p["w_down"], h)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (token-choice top-k, capacity + scatter dispatch)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff_expert: int
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    # Arctic-style parallel dense residual branch
+    dense_residual_ff: Optional[int] = None
+    # shard the token dim over 'model' around dispatch/combine: turns the
+    # full expert-output all-gather into token-sharded exchange (§Perf H2)
+    token_shard: bool = False
+    # "global": one dispatch over all B*L tokens (simple, but the scatter
+    # updates span every data shard -> giant all-gathers).  "grouped":
+    # GShard/Switch-style group-local dispatch vmapped over the batch dim;
+    # capacity is per sequence, updates never cross data shards (§Perf H2).
+    dispatch: str = "global"
+
+
+def moe_init(key, cfg: MoEConfig, dtype=jnp.float32):
+    kr, k1, k2, k3, kd = jax.random.split(key, 5)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    scale = 1.0 / math.sqrt(D)
+
+    def ew(k, shape, axes):
+        return Px((scale * jax.random.normal(k, shape, jnp.float32)).astype(dtype), axes)
+
+    p = {
+        "router": core.dense_init(kr, D, E, axes=("p_embed", None),
+                                  dtype=jnp.float32),
+        # expert-internal ffn dim stays unsharded: experts themselves are
+        # the unit of model ('expert') parallelism.
+        "w_gate": ew(k1, (E, D, F), ("p_experts", "p_embed", "p_expert_ffn")),
+        "w_up": ew(k2, (E, D, F), ("p_experts", "p_embed", "p_expert_ffn")),
+        "w_down": ew(k3, (E, F, D), ("p_experts", "p_expert_ffn", "p_embed")),
+    }
+    if cfg.dense_residual_ff is not None:
+        p["dense"] = swiglu_init(kd, D, cfg.dense_residual_ff, dtype=dtype)
+    return p
+
+
+def moe(p, x: jax.Array, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, L, D] -> (y [B, L, D], aux load-balance loss scalar).
+
+    Dense-shape dispatch: tokens are scattered into a per-expert buffer of
+    static capacity; overflow tokens are dropped (standard Switch/GShard
+    semantics).  Expert/FFN dims carry logical sharding axes so XLA SPMD
+    partitions expert compute over the `model` axis (expert parallelism).
+    """
+    if cfg.dispatch == "grouped":
+        return _moe_grouped(p, x, cfg)
+    B, L, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * L
+    xt = x.reshape(T, D)
+    if cfg.token_shard:
+        xt = logical(xt, "moe_tokens", "embed")
+
+    gates = core.dense(p["router"], xt.astype(jnp.float32))  # [T, E]
+    probs = jax.nn.softmax(gates, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)  # [T, K]
+    top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    me = probs.mean(0)
+    ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    cap = int(max(1, round(cfg.capacity_factor * K * T / E)))
+    # position of each (token, choice) within its expert queue
+    flat_e = top_e.reshape(-1)  # [T*K], token-major
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [T*K, E]
+    pos_in_e = (jnp.cumsum(oh, axis=0) - oh)  # exclusive prefix count
+    flat_pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = flat_pos < cap
+    slot = jnp.where(keep, flat_e * cap + flat_pos, E * cap)  # drop bucket
+
+    # dispatch: [E*cap(+1 drop slot), D]
+    buf = jnp.zeros((E * cap + 1, D), x.dtype)
+    tok_idx = jnp.repeat(jnp.arange(T), K)
+    buf = buf.at[slot].set(xt[tok_idx])
+    eb = buf[: E * cap].reshape(E, cap, D)
+    eb = logical(eb, "experts", None, "embed")
+
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb, p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", eb, p["w_up"].astype(x.dtype))
+    h = logical(g * u, "experts", None, "expert_ffn")
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    out = logical(out, "experts", None, "embed")
+
+    flat_out = jnp.concatenate([out.reshape(E * cap, D),
+                                jnp.zeros((1, D), x.dtype)])
+    gathered = flat_out[slot]  # [T*K, D]; dropped -> zeros
+    if cfg.token_shard:
+        gathered = logical(gathered, "moe_tokens", "embed")
+    w = (top_p.reshape(-1) * keep).astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[tok_idx].add(gathered * w[:, None])
+    if cfg.token_shard:
+        y = logical(y, "moe_tokens", "embed")
+    y = y.reshape(B, L, D)
+
+    if cfg.dense_residual_ff is not None:
+        y = y + swiglu(p["dense"], x)
+    return y, aux
+
+
+def _moe_grouped(p, x: jax.Array, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array]:
+    """Group-local dispatch (GShard/Switch): each sequence routes into
+    its own capacity buffer, vmapped over the batch dim.
+
+    Dispatch/combine scatters and the O(T x E) position cumsum stay
+    data-sharded (no cross-shard all-gather of token updates); the only
+    model-axis exchange left is the expert-compute resharding of the
+    per-group buffers.  Capacity is per sequence (cap = c_f * K * L / E).
+    """
+    B, L, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    cap = int(max(1, round(cfg.capacity_factor * K * L / E)))
+
+    def route_one(xt):                      # xt: [L, D]
+        gates = core.dense(p["router"], xt.astype(jnp.float32))
+        probs = jax.nn.softmax(gates, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, K)
+        top_p = top_p / jnp.clip(top_p.sum(-1, keepdims=True), 1e-9)
+        me = probs.mean(0)
+        ce = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+            1.0) / (L * K)
+        aux = E * jnp.sum(me * ce)
+        flat_e = top_e.reshape(-1)
+        oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        pos_in_e = jnp.cumsum(oh, axis=0) - oh
+        flat_pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], 1)[:, 0]
+        keep = flat_pos < cap
+        slot = jnp.where(keep, flat_e * cap + flat_pos, E * cap)
+        tok_idx = jnp.repeat(jnp.arange(L), K)
+        buf = jnp.zeros((E * cap + 1, D), x.dtype).at[slot].set(xt[tok_idx])
+        w = (top_p.reshape(-1) * keep).astype(x.dtype)
+        return buf[: E * cap], slot, w, tok_idx, aux
+
+    bufs, slots, ws, tok_idx, auxs = jax.vmap(route_one)(x)  # [B, E*cap, D]
+    eb = bufs.reshape(B, E, cap, D)
+    eb = logical(eb, "batch", "experts", None, "embed")
+
+    g = jax.nn.silu(jnp.einsum("becd,edf->becf", eb,
+                               p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("becd,edf->becf", eb, p["w_up"].astype(x.dtype))
+    h = logical(g * u, "batch", "experts", None, "expert_ffn")
+    out = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(x.dtype))
+    out = logical(out, "batch", "experts", None, "embed")
+
+    def combine_one(out_b, slot_b, w_b, tok_b):
+        flat = jnp.concatenate([out_b.reshape(E * cap, D),
+                                jnp.zeros((1, D), x.dtype)])
+        gathered = flat[slot_b]
+        return jnp.zeros((L, D), x.dtype).at[tok_b].add(
+            gathered * w_b[:, None])
+
+    y = jax.vmap(combine_one)(out, slots, ws, tok_idx)
+    if cfg.dense_residual_ff is not None:
+        y = y + swiglu(p["dense"], x)
+    return y, auxs.mean()

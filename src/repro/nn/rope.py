@@ -1,0 +1,50 @@
+"""Rotary position embeddings: NeoX-style full-dim and ChatGLM 2-D (partial)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _angles(positions: jax.Array, rotary_dim: int, theta: float) -> jax.Array:
+    """positions [..., L] -> angles [..., L, rotary_dim/2] (float32)."""
+    inv_freq = 1.0 / (
+        theta ** (jnp.arange(0, rotary_dim, 2, dtype=jnp.float32) / rotary_dim)
+    )
+    return positions.astype(jnp.float32)[..., None] * inv_freq
+
+
+def _rotate(x: jax.Array, ang: jax.Array) -> jax.Array:
+    """Rotate pairs (x[..., :d/2], x[..., d/2:]) by `ang` (NeoX split halves)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    theta: float = 10000.0,
+    style: str = "neox",
+) -> jax.Array:
+    """x: [B, L, H, hd]; positions: [B, L] (or [L]).
+
+    style "neox": rotary over the full head dim (Qwen/Llama family).
+    style "partial": rotary over the first half of the head dim only,
+    the rest passes through (ChatGLM's 2-D RoPE realization).
+    """
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    hd = x.shape[-1]
+    rotary_dim = hd if style == "neox" else hd // 2
+    ang = _angles(positions, rotary_dim, theta)  # [B, L, rd/2]
+    ang = ang[:, :, None, :]  # broadcast over heads
+    if style == "neox":
+        return _rotate(x, ang)
+    if style == "partial":
+        xr, xp = x[..., :rotary_dim], x[..., rotary_dim:]
+        return jnp.concatenate([_rotate(xr, ang), xp], axis=-1)
+    raise ValueError(f"unknown rope style {style!r}")

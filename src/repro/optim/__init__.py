@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (
+    Optimizer, sgd, momentum, adam, adamw, apply_updates, global_norm, clip_by_global_norm,
+)
+
+__all__ = [
+    "Optimizer", "sgd", "momentum", "adam", "adamw", "apply_updates",
+    "global_norm", "clip_by_global_norm",
+]

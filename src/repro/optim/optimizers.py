@@ -1,0 +1,111 @@
+"""Pure-JAX pytree optimizers (no optax in this environment).
+
+`Optimizer` is an (init, update) pair in the optax convention:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+Learning rates may be floats or callables of the (traced) step.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable]
+
+
+def _lr(lr: Schedule, step):
+    return lr(step) if callable(lr) else lr
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (n + 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), n
+
+
+def sgd(lr: Schedule) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        eta = _lr(lr, step)
+        return jax.tree.map(lambda g: -eta * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: Schedule, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, m, params, step):
+        eta = _lr(lr, step)
+        m = jax.tree.map(lambda mm, g: beta * mm + g, m, grads)
+        return jax.tree.map(lambda mm: -eta * mm, m), m
+
+    return Optimizer(init, update)
+
+
+def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, moment_dtype=jnp.float32) -> Optimizer:
+    """moment_dtype=bfloat16 halves optimizer memory (update math stays
+    f32; moments are stored rounded — the usual memory/quality trade)."""
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        eta = _lr(lr, step)
+        t = step + 1
+        m = jax.tree.map(
+            lambda mm, g: (b1 * mm.astype(jnp.float32)
+                           + (1 - b1) * g.astype(jnp.float32)
+                           ).astype(moment_dtype), state["m"], grads)
+        v = jax.tree.map(
+            lambda vv, g: (b2 * vv.astype(jnp.float32) + (1 - b2)
+                           * jnp.square(g.astype(jnp.float32))
+                           ).astype(moment_dtype), state["v"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        upd = jax.tree.map(
+            lambda mm, vv: -eta * (mm.astype(jnp.float32) / bc1)
+            / (jnp.sqrt(vv.astype(jnp.float32) / bc2) + eps), m, v)
+        return upd, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          moment_dtype=jnp.float32) -> Optimizer:
+    base = adam(lr, b1, b2, eps, moment_dtype=moment_dtype)
+
+    def update(grads, state, params, step):
+        upd, state2 = base.update(grads, state, params, step)
+        if weight_decay:
+            eta = _lr(lr, step)
+            upd = jax.tree.map(
+                lambda u, p: u - eta * weight_decay * p.astype(jnp.float32),
+                upd, params)
+        return upd, state2
+
+    return Optimizer(base.init, update)

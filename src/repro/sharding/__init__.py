@@ -1,0 +1,19 @@
+from repro.sharding.api import (
+    Rules,
+    logical,
+    set_rules,
+    current_rules,
+    make_rules,
+    spec_for,
+    param_sharding_tree,
+)
+
+__all__ = [
+    "Rules",
+    "logical",
+    "set_rules",
+    "current_rules",
+    "make_rules",
+    "spec_for",
+    "param_sharding_tree",
+]

@@ -1,0 +1,117 @@
+"""OTA channel statistics: unbiasedness, faithful-vs-equivalent variance
+match, ideal exactness, kernel path agreement (paper eqs. 8-19)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (OTAConfig, cluster_ota, conventional_ota, global_ota,
+                        random_topology, uniform_topology)
+from repro.core.channel import pack_cx, unpack_cx
+
+TOPO = uniform_topology(C=4, M=5, K=64, K_ps=64, sigma_z2=1.0)
+DELTAS = np.asarray(
+    jax.random.normal(jax.random.PRNGKey(1), (4, 5, 256)))
+
+
+def _mc(fn, n=400):
+    keys = jax.random.split(jax.random.PRNGKey(0), n)
+    f = jax.jit(fn)
+    return jnp.stack([f(k) for k in keys])
+
+
+def test_pack_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 10))
+    np.testing.assert_allclose(unpack_cx(pack_cx(x)), x, rtol=1e-6)
+
+
+def test_ideal_cluster_is_exact_mean():
+    est = cluster_ota(jax.random.PRNGKey(0), jnp.asarray(DELTAS), TOPO, 1.0,
+                      OTAConfig(mode="ideal"))
+    np.testing.assert_allclose(est, DELTAS.mean(1), rtol=1e-6)
+
+
+def test_ideal_global_is_exact_mean():
+    isd = jnp.asarray(DELTAS.mean(1))
+    est = global_ota(jax.random.PRNGKey(0), isd, TOPO, 20.0,
+                     OTAConfig(mode="ideal"))
+    np.testing.assert_allclose(est, isd.mean(0), rtol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["faithful", "equivalent"])
+def test_cluster_unbiased(mode):
+    ests = _mc(lambda k: cluster_ota(k, jnp.asarray(DELTAS), TOPO, 1.0,
+                                     OTAConfig(mode=mode)))
+    bias = np.abs(np.asarray(ests.mean(0)) - DELTAS.mean(1))
+    # MC error ~ std/sqrt(400)
+    assert bias.mean() < 4.0 * float(ests.std(0).mean()) / np.sqrt(400)
+
+
+@pytest.mark.parametrize("mode", ["faithful", "equivalent"])
+def test_global_unbiased(mode):
+    isd = jnp.asarray(DELTAS.mean(1))
+    ests = _mc(lambda k: global_ota(k, isd, TOPO, 20.0, OTAConfig(mode=mode)))
+    bias = np.abs(np.asarray(ests.mean(0)) - isd.mean(0))
+    assert bias.mean() < 4.0 * float(ests.std(0).mean()) / np.sqrt(400)
+
+
+def test_equivalent_matches_faithful_variance():
+    """The closed-form surrogate must match the simulated channel's
+    second moment (the whole point of the production mode)."""
+    for hop, arg, P in [
+        (cluster_ota, jnp.asarray(DELTAS), 1.0),
+        (global_ota, jnp.asarray(DELTAS.mean(1)), 20.0),
+        (conventional_ota, jnp.asarray(DELTAS), 1.0),
+    ]:
+        s_f = _mc(lambda k, h=hop, a=arg, p=P: h(
+            k, a, TOPO, p, OTAConfig(mode="faithful"))).std(0).mean()
+        s_e = _mc(lambda k, h=hop, a=arg, p=P: h(
+            k, a, TOPO, p, OTAConfig(mode="equivalent"))).std(0).mean()
+        assert abs(float(s_f) - float(s_e)) / float(s_f) < 0.12, (
+            hop.__name__, float(s_f), float(s_e))
+
+
+def test_kernel_path_matches_scan_path_statistics():
+    cfgk = OTAConfig(mode="faithful", use_kernel=True)
+    cfgs = OTAConfig(mode="faithful", use_kernel=False)
+    ek = _mc(lambda k: cluster_ota(k, jnp.asarray(DELTAS), TOPO, 1.0, cfgk),
+             n=200)
+    es = _mc(lambda k: cluster_ota(k, jnp.asarray(DELTAS), TOPO, 1.0, cfgs),
+             n=200)
+    assert abs(float(ek.std(0).mean()) - float(es.std(0).mean())) < 0.1 * float(
+        es.std(0).mean())
+    bias = np.abs(np.asarray(ek.mean(0)) - DELTAS.mean(1)).mean()
+    assert bias < 4.0 * float(ek.std(0).mean()) / np.sqrt(200)
+
+
+def test_more_antennas_less_noise():
+    """Paper Remark 2: K reduces the channel perturbation."""
+    t_small = uniform_topology(C=2, M=4, K=8, K_ps=8)
+    t_big = uniform_topology(C=2, M=4, K=128, K_ps=128)
+    d = jnp.asarray(DELTAS[:2, :4])
+    s_small = _mc(lambda k: cluster_ota(k, d, t_small, 1.0,
+                                        OTAConfig(mode="faithful")), n=100).std(0).mean()
+    s_big = _mc(lambda k: cluster_ota(k, d, t_big, 1.0,
+                                      OTAConfig(mode="faithful")), n=100).std(0).mean()
+    assert float(s_big) < 0.5 * float(s_small)
+
+
+def test_interference_increases_variance():
+    d = jnp.asarray(DELTAS)
+    s_on = _mc(lambda k: cluster_ota(k, d, TOPO, 1.0,
+                                     OTAConfig(mode="faithful",
+                                               interference=True)), n=100).std(0).mean()
+    s_off = _mc(lambda k: cluster_ota(k, d, TOPO, 1.0,
+                                      OTAConfig(mode="faithful",
+                                                interference=False)), n=100).std(0).mean()
+    assert float(s_on) > float(s_off)
+
+
+def test_random_topology_geometry():
+    topo = random_topology(0, C=4, M=5)
+    assert topo.beta_mu_is.shape == (4, 5, 4)
+    # own-cluster distances in [0.5, 1] -> beta in [1, 16]
+    for c in range(4):
+        own = topo.d_mu_is[c, :, c]
+        assert (own >= 0.5 - 1e-9).all() and (own <= 1.0 + 1e-9).all()
+    assert (topo.beta_bar_c > 0).all()

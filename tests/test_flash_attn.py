@@ -1,0 +1,42 @@
+"""Pallas flash-attention kernel vs jnp oracle (interpret=True)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, flash_attention_ref
+
+SHAPES = [
+    # (B, L, H, KV, hd, qb, kb)
+    (2, 64, 4, 2, 16, 32, 32),     # GQA, multi-block
+    (1, 128, 8, 8, 64, 64, 32),    # MHA
+    (2, 96, 6, 2, 32, 32, 48),     # G=3, uneven-ish blocks
+    (1, 32, 2, 1, 16, 64, 32),     # q block straddles fold groups
+    (1, 256, 2, 2, 128, 128, 128), # MXU-aligned tile
+]
+
+
+@pytest.mark.parametrize("B,L,H,KV,hd,qb,kb", SHAPES)
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref(B, L, H, KV, hd, qb, kb, causal):
+    rng = np.random.default_rng(B * 100 + L)
+    q = jnp.asarray(rng.standard_normal((B, L, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, L, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, L, KV, hd)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, q_block=qb, kv_block=kb,
+                          interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_bf16_io():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 64, 4, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 64, 2, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 64, 2, 32)), jnp.bfloat16)
+    out = flash_attention(q, k, v, q_block=32, kv_block=32, interpret=True)
+    ref = flash_attention_ref(q, k, v)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)

@@ -1,0 +1,61 @@
+"""HLO collective parsing + roofline arithmetic (launch/hlo.py)."""
+import numpy as np
+
+from repro.launch.hlo import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline,
+                              collective_stats, _shape_bytes)
+
+HLO = """
+ENTRY main {
+  %p = f32[256,1024]{1,0} parameter(0)
+  %ar = f32[256,1024]{1,0} all-reduce(%p), channel_id=1, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %ag = bf16[64,512]{1,0} all-gather(%x), channel_id=2, replica_groups=[2,8]<=[16], dimensions={0}
+  %rs = (f32[128]{0}, f32[64]{0}) reduce-scatter(%a, %b), channel_id=3, replica_groups={{0,1}}, dimensions={0}
+  %cp = u32[32]{0} collective-permute(%y), source_target_pairs={{0,1}}
+  %dot = f32[256,256]{1,0} dot(%p, %p)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[256,1024]") == 256 * 1024 * 4
+    assert _shape_bytes("bf16[64,512]") == 64 * 512 * 2
+    assert _shape_bytes("(f32[128], f32[64])") == (128 + 64) * 4
+    assert _shape_bytes("pred[]") == 0 or _shape_bytes("pred[]") == 1
+
+
+def test_collective_stats_parsing():
+    st = collective_stats(HLO)
+    assert st.n_ops == 4
+    assert st.by_kind["all-reduce"] == 256 * 1024 * 4
+    assert st.by_kind["all-gather"] == 64 * 512 * 2
+    assert st.by_kind["reduce-scatter"] == (128 + 64) * 4
+    assert st.by_kind["collective-permute"] == 32 * 4
+    # group sizes: {0,1,2,3} -> 4; iota [2,8] -> 8; {0,1} -> 2
+    assert ("all-reduce", 4) in st.by_group
+    assert ("all-gather", 8) in st.by_group
+    assert ("reduce-scatter", 2) in st.by_group
+    assert st.bytes_crossing(8) >= 64 * 512 * 2
+
+
+def test_roofline_terms():
+    r = Roofline(flops=197e12, hbm_bytes=819e9, coll_bytes=50e9)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 1.0) < 1e-9
+    assert abs(r.t_collective - 1.0) < 1e-9
+    r2 = Roofline(flops=1e12, hbm_bytes=819e9, coll_bytes=0)
+    assert r2.dominant == "memory"
+    r3 = Roofline(flops=1e15, hbm_bytes=1e9, coll_bytes=1e9)
+    assert r3.dominant == "compute"
+
+
+def test_model_flops_sane():
+    from benchmarks.roofline import model_flops
+    # dense train: 6 * N * D / chips
+    f = model_flops("qwen2-1.5b", "train_4k")
+    # qwen2-1.5b ~ 1.5e9 params, 256*4096 tokens, 256 chips
+    approx = 6 * 1.5e9 * 256 * 4096 / 256
+    assert 0.3 * approx < f < 3 * approx
+    # moe active << total
+    f_moe = model_flops("qwen3-moe-235b-a22b", "train_4k")
+    f_moe_total_scale = 6 * 235e9 * 256 * 4096 / 256
+    assert f_moe < 0.25 * f_moe_total_scale  # top-8 of 128 experts

@@ -1,0 +1,86 @@
+"""Pallas ota_combine kernel vs the pure-jnp oracle (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import mf_combine, ota_combine, ota_combine_ref
+
+
+def _mk(rng, U, K, N):
+    h = (rng.standard_normal((U, K, N)) + 1j * rng.standard_normal((U, K, N))
+         ).astype(np.complex64)
+    t = (rng.standard_normal((U, N)) + 1j * rng.standard_normal((U, N))
+         ).astype(np.complex64)
+    z = (rng.standard_normal((K, N)) + 1j * rng.standard_normal((K, N))
+         ).astype(np.complex64)
+    w = rng.standard_normal(U).astype(np.float32)
+    return h, t, z, w
+
+
+SHAPES = [
+    (1, 1, 64),       # degenerate
+    (5, 16, 256),     # small aligned
+    (4, 7, 130),      # unaligned K and N (padding path)
+    (20, 100, 1000),  # paper scale (C*M users, 100 antennas)
+    (64, 8, 2048),    # wide-user
+    (3, 33, 513),     # prime-ish
+]
+
+
+@pytest.mark.parametrize("U,K,N", SHAPES)
+def test_kernel_matches_ref(U, K, N):
+    rng = np.random.default_rng(U * 1000 + K * 10 + N)
+    h, t, z, w = _mk(rng, U, K, N)
+    args = (jnp.real(h), jnp.imag(h), jnp.real(t), jnp.imag(t),
+            jnp.real(z), jnp.imag(z), jnp.asarray(w))
+    yr, yi = ota_combine(*args, interpret=True)
+    rr, ri = ota_combine_ref(*args)
+    scale = float(jnp.abs(rr).max()) + 1e-6
+    np.testing.assert_allclose(yr, rr, atol=2e-6 * scale * np.sqrt(U * K))
+    np.testing.assert_allclose(yi, ri, atol=2e-6 * scale * np.sqrt(U * K))
+
+
+@pytest.mark.parametrize("block_n,block_k", [(128, 4), (512, 8), (1024, 16)])
+def test_kernel_block_shapes(block_n, block_k):
+    rng = np.random.default_rng(0)
+    h, t, z, w = _mk(rng, 8, 24, 700)
+    args = (jnp.real(h), jnp.imag(h), jnp.real(t), jnp.imag(t),
+            jnp.real(z), jnp.imag(z), jnp.asarray(w))
+    yr, yi = ota_combine(*args, block_n=block_n, block_k=block_k,
+                         interpret=True)
+    rr, ri = ota_combine_ref(*args)
+    np.testing.assert_allclose(yr, rr, rtol=2e-4, atol=1e-3)
+    np.testing.assert_allclose(yi, ri, rtol=2e-4, atol=1e-3)
+
+
+def test_mf_combine_complex_wrapper():
+    rng = np.random.default_rng(7)
+    h, t, z, w = _mk(rng, 6, 12, 200)
+    y = mf_combine(jnp.asarray(h), jnp.asarray(t), jnp.asarray(z),
+                   jnp.asarray(w))
+    rr, ri = ota_combine_ref(jnp.real(h), jnp.imag(h), jnp.real(t),
+                             jnp.imag(t), jnp.real(z), jnp.imag(z),
+                             jnp.asarray(w))
+    np.testing.assert_allclose(jnp.real(y), rr, rtol=2e-4, atol=1e-3)
+    np.testing.assert_allclose(jnp.imag(y), ri, rtol=2e-4, atol=1e-3)
+
+
+def test_mf_combine_default_weights_equal_ones():
+    rng = np.random.default_rng(3)
+    h, t, z, _ = _mk(rng, 4, 8, 128)
+    y1 = mf_combine(jnp.asarray(h), jnp.asarray(t), jnp.asarray(z))
+    y2 = mf_combine(jnp.asarray(h), jnp.asarray(t), jnp.asarray(z),
+                    jnp.ones((4,), jnp.float32))
+    np.testing.assert_allclose(y1, y2)
+
+
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_kernel_dtype_sweep(dtype):
+    # planar kernel is f32; this guards the wrapper casts
+    rng = np.random.default_rng(11)
+    h, t, z, w = _mk(rng, 5, 10, 150)
+    y = mf_combine(jnp.asarray(h), jnp.asarray(t), jnp.asarray(z),
+                   jnp.asarray(w.astype(dtype)))
+    assert y.dtype == jnp.complex64
+    assert not bool(jnp.any(jnp.isnan(y)))

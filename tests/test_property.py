@@ -1,0 +1,123 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+from repro.core.channel import pack_cx, unpack_cx
+from repro.kernels import ota_combine, ota_combine_ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@given(n=st.integers(1, 200), b=st.integers(1, 4))
+@settings(**SETTINGS)
+def test_pack_unpack_roundtrip(n, b):
+    x = np.random.default_rng(n).standard_normal((b, 2 * n)).astype(np.float32)
+    np.testing.assert_allclose(unpack_cx(pack_cx(jnp.asarray(x))), x,
+                               rtol=1e-6)
+
+
+@given(sizes=st.lists(st.integers(1, 40), min_size=1, max_size=6),
+       seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_flatten_unflatten_roundtrip(sizes, seed):
+    rng = np.random.default_rng(seed)
+    tree = {f"k{i}": jnp.asarray(rng.standard_normal((s,)), jnp.float32)
+            for i, s in enumerate(sizes)}
+    spec = agg.make_flat_spec(tree)
+    flat = agg.flatten(spec, tree)
+    assert flat.shape[0] % 2 == 0                      # even-padded
+    back = agg.unflatten(spec, flat)
+    for k in tree:
+        np.testing.assert_allclose(back[k], tree[k], rtol=1e-6)
+
+
+@given(u=st.integers(1, 12), k=st.integers(1, 24), n=st.integers(1, 300),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=10, deadline=None)
+def test_kernel_vs_oracle_property(u, k, n, seed):
+    rng = np.random.default_rng(seed)
+    mk = lambda *s: rng.standard_normal(s).astype(np.float32)
+    args = (mk(u, k, n), mk(u, k, n), mk(u, n), mk(u, n), mk(k, n), mk(k, n),
+            mk(u))
+    yr, yi = ota_combine(*[jnp.asarray(a) for a in args], interpret=True)
+    rr, ri = ota_combine_ref(*[jnp.asarray(a) for a in args])
+    scale = float(jnp.abs(rr).max()) + float(jnp.abs(ri).max()) + 1e-3
+    np.testing.assert_allclose(yr, rr, atol=1e-5 * scale * np.sqrt(u * k))
+    np.testing.assert_allclose(yi, ri, atol=1e-5 * scale * np.sqrt(u * k))
+
+
+@given(seed=st.integers(0, 2 ** 16), c=st.integers(1, 4),
+       m=st.integers(1, 4))
+@settings(**SETTINGS)
+def test_partitioners_preserve_samples(seed, c, m):
+    from repro.data import (partition_cluster_noniid, partition_iid,
+                            partition_noniid_shards)
+    rng = np.random.default_rng(seed)
+    n = 40 * c * m
+    X = rng.standard_normal((n, 5)).astype(np.float32)
+    Y = rng.integers(0, 10, n).astype(np.int32)
+    for part in (partition_iid, partition_noniid_shards,
+                 partition_cluster_noniid):
+        Xs, Ys = part(seed, X, Y, c, m)
+        assert Xs.shape[:2] == (c, m)
+        assert Ys.shape[:3] == Xs.shape[:3]
+        # every (x, y) pair in the partition exists in the source
+        lut = {tuple(np.round(x, 5)): int(y) for x, y in zip(X, Y)}
+        flat_x = Xs.reshape(-1, 5)
+        flat_y = Ys.reshape(-1)
+        for i in range(0, len(flat_x), max(1, len(flat_x) // 16)):
+            key = tuple(np.round(flat_x[i], 5))
+            assert key in lut and lut[key] == int(flat_y[i])
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_checkpoint_roundtrip(seed):
+    import tempfile, os
+    from repro import checkpoint as ckpt
+    rng = np.random.default_rng(seed)
+    tree = {
+        "a": {"w": rng.standard_normal((3, 4)).astype(np.float32)},
+        "b": [rng.integers(0, 100, (5,)).astype(np.int32),
+              np.float32(seed)],
+    }
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.npz")
+        ckpt.save(path, tree)
+        back = ckpt.load(path, tree)
+        np.testing.assert_allclose(back["a"]["w"], tree["a"]["w"])
+        np.testing.assert_allclose(back["b"][0], tree["b"][0])
+
+
+@given(shape=st.sampled_from([(8,), (3, 5), (2, 2, 2)]),
+       seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_symbol_power_nonnegative_and_quadratic(shape, seed):
+    from repro.core.aggregation import symbol_power
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((4,) + (int(np.prod(shape)) * 2,)),
+                    jnp.float32)
+    p1 = float(symbol_power(x, 1.0))
+    p3 = float(symbol_power(x, 3.0))
+    assert p1 >= 0
+    np.testing.assert_allclose(p3, 9 * p1, rtol=1e-5)
+
+
+@given(eta=st.floats(1e-4, 0.9), tau=st.integers(1, 4), I=st.integers(1, 4))
+@settings(**SETTINGS)
+def test_bound_monotone_in_noise(eta, tau, I):
+    """Theorem 1 evaluator: more channel noise -> larger bound."""
+    import dataclasses
+    from repro.core import uniform_topology
+    from repro.core.bound import BoundParams, theorem1_curve
+    topo_lo = uniform_topology(C=2, M=3, K=64, K_ps=64, sigma_z2=0.1)
+    topo_hi = uniform_topology(C=2, M=3, K=64, K_ps=64, sigma_z2=100.0)
+    bp = BoundParams(tau=tau, I=I)
+    lo = theorem1_curve(topo_lo, bp, 30)
+    hi = theorem1_curve(topo_hi, bp, 30)
+    assert hi[-1] >= lo[-1]
+    assert np.isfinite(lo).all() and np.isfinite(hi).all()

@@ -1,0 +1,101 @@
+"""Mode A (paper-scale) W-HFL trainer integration tests: the full
+protocol on the paper's MNIST-like task, all three channel modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import OTAConfig, uniform_topology
+from repro.core.whfl import WHFLConfig, WHFLTrainer, accuracy
+from repro.data import partition_iid, synthetic_mnist
+from repro.models.paper_models import mnist_apply, mnist_init
+from repro.optim import sgd
+
+C, M = 2, 3
+
+
+@pytest.fixture(scope="module")
+def data():
+    (xtr, ytr), (xte, yte) = synthetic_mnist(0, n_train=3000, n_test=600)
+    X, Y = partition_iid(0, xtr, ytr, C, M)
+    return X, Y, xte, yte
+
+
+def _loss(params, x, y, rng):
+    logits = mnist_apply(params, x)
+    onehot = jax.nn.one_hot(y, 10)
+    return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+
+
+def _train(data, cfg, topo=None, rounds=15):
+    X, Y, xte, yte = data
+    topo = topo or uniform_topology(C=C, M=M, K=64, K_ps=64, sigma_z2=1.0)
+    trainer = WHFLTrainer(_loss, sgd(0.1), topo, cfg, X, Y)
+    from repro.nn.core import split_params
+    params, _ = split_params(mnist_init(jax.random.PRNGKey(0)))
+    state = trainer.init_state(params)
+    key = jax.random.PRNGKey(1)
+    for _ in range(rounds):
+        key, sub = jax.random.split(key)
+        state = trainer.round(state, sub)
+    acc = accuracy(mnist_apply, state["theta"], jnp.asarray(xte),
+                   jnp.asarray(yte))
+    return state, acc, trainer
+
+
+@pytest.mark.parametrize("mode", ["ideal", "equivalent"])
+def test_whfl_learns(data, mode):
+    cfg = WHFLConfig(tau=1, I=1, batch=128,
+                     ota=OTAConfig(mode=mode))
+    state, acc, trainer = _train(data, cfg)
+    assert acc > 0.5, acc  # 10-class task, random = 0.1
+    assert trainer.avg_edge_power(state) > 0
+
+
+def test_whfl_faithful_short(data):
+    cfg = WHFLConfig(tau=1, I=1, batch=128,
+                     ota=OTAConfig(mode="faithful"))
+    topo = uniform_topology(C=C, M=M, K=64, K_ps=64, sigma_z2=1.0)
+    state, acc, _ = _train(data, cfg, topo=topo, rounds=10)
+    assert acc > 0.3, acc
+
+
+def test_whfl_multiple_cluster_iterations(data):
+    cfg = WHFLConfig(tau=2, I=2, batch=64, ota=OTAConfig(mode="equivalent"))
+    state, acc, trainer = _train(data, cfg, rounds=8)
+    assert acc > 0.4, acc
+    # I=2 -> twice the edge transmissions per round
+    assert float(state["n_edge_tx"]) == 8 * 2
+
+
+def test_conventional_fl_baseline(data):
+    # error-free conventional FL == FedAvg: must learn
+    cfg = WHFLConfig(tau=1, I=1, batch=128, mode="conventional",
+                     ota=OTAConfig(mode="ideal"))
+    state, acc, trainer = _train(data, cfg, rounds=15)
+    assert acc > 0.4, acc
+    assert float(state["n_is_tx"]) == 0  # no IS hop in conventional FL
+
+
+def test_whfl_beats_conventional_over_the_air(data):
+    """The paper's central experimental claim (Fig. 2a): under the same
+    noisy channel, W-HFL's short MU->IS links beat conventional OTA FL's
+    long MU->PS links."""
+    topo = uniform_topology(C=C, M=M, K=64, K_ps=64, sigma_z2=1.0,
+                            d_cluster=2.5)
+    cfg_w = WHFLConfig(tau=1, I=1, batch=128,
+                       ota=OTAConfig(mode="equivalent"))
+    cfg_c = WHFLConfig(tau=1, I=1, batch=128, mode="conventional",
+                       ota=OTAConfig(mode="equivalent"))
+    _, acc_w, _ = _train(data, cfg_w, topo=topo, rounds=12)
+    _, acc_c, _ = _train(data, cfg_c, topo=topo, rounds=12)
+    assert acc_w > acc_c, (acc_w, acc_c)
+
+
+def test_power_accounting_scales_with_P():
+    """Per-symbol power must scale as P^2 (paper §V accounting)."""
+    from repro.core.aggregation import symbol_power
+    flat = jnp.ones((4, 100))
+    p1 = float(symbol_power(flat, 1.0))
+    p2 = float(symbol_power(flat, 2.0))
+    assert abs(p2 / p1 - 4.0) < 1e-6
