@@ -5,29 +5,21 @@ p=4, sigma_h^2=1, P_t = 1 + 1e-2 t, P_IS = 20 P_t, P_t,low = 0.5 P_t for
 I=1 runs, normalized time IT = 400.  Real MNIST/CIFAR are not available
 offline; deterministic synthetic tasks of identical shape stand in (the
 claims validated are the paper's *relative* orderings).
+
+Since the scenario-sweep engine landed, the actual training loop lives
+in `repro.sim.SweepRunner`; this module only keeps the benchmark-facing
+result shape (`RunResult`) and the adapter from sweep results.
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import List, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import OTAConfig, random_topology
-from repro.core.whfl import WHFLConfig, WHFLTrainer, accuracy
-from repro.data import (partition_cluster_noniid, partition_iid,
-                        partition_noniid_shards)
-from repro.nn.core import split_params
-from repro.optim import adam, sgd
-
-PARTITIONERS = {
-    "iid": partition_iid,
-    "noniid": partition_noniid_shards,
-    "cluster-noniid": partition_cluster_noniid,
-}
+# Re-exported for backwards compatibility with older benchmark code.
+from repro.data import PARTITIONERS  # noqa: F401
+from repro.sim import SweepResult, SweepRunner
 
 
 @dataclass
@@ -43,38 +35,24 @@ class RunResult:
         return float(np.mean(self.accs[-3:])) if self.accs else 0.0
 
 
-def run_scheme(*, name: str, init_fn, apply_fn, loss_fn, X, Y, xte, yte,
-               I: int, tau: int, batch: int, total_IT: int,
-               mode: str = "whfl", ota_mode: str = "equivalent",
-               topo=None, seed: int = 0, lr: float = 5e-2,
-               sigma_z2: float = 10.0, eval_every: int = 1,
-               opt: str = "adam") -> RunResult:
-    """Train one scheme for T = total_IT / I global rounds (normalized
-    time IT, paper §V) and record the accuracy trajectory."""
-    C, M = X.shape[0], X.shape[1]
-    topo = topo or random_topology(seed, C=C, M=M, K=100, K_ps=100,
-                                   sigma_z2=sigma_z2)
-    power_low = (I == 1)  # paper: P_t,low = 0.5 P_t for I=1 runs
-    cfg = WHFLConfig(tau=tau, I=I, batch=batch, mode=mode,
-                     ota=OTAConfig(mode=ota_mode), power_low=power_low)
-    optimizer = adam(lr) if opt == "adam" else sgd(lr)
-    trainer = WHFLTrainer(loss_fn, optimizer, topo, cfg, X, Y)
-    params, _ = split_params(init_fn(jax.random.PRNGKey(seed)))
-    state = trainer.init_state(params)
-    key = jax.random.PRNGKey(seed + 1)
-    T = max(1, total_IT // I)
-    accs = []
-    t0 = time.time()
-    for t in range(T):
-        key, sub = jax.random.split(key)
-        state = trainer.round(state, sub)
-        if t % eval_every == 0 or t == T - 1:
-            accs.append(accuracy(apply_fn, state["theta"],
-                                 jnp.asarray(xte), jnp.asarray(yte)))
-    dt = time.time() - t0
-    return RunResult(name=name, accs=accs,
-                     edge_power=trainer.avg_edge_power(state),
-                     is_power=trainer.avg_is_power(state), seconds=dt)
+def to_run_result(name: str, res: SweepResult,
+                  seed_idx: int = 0) -> RunResult:
+    """Adapt one seed's trajectory of a `SweepResult` to the benchmark
+    result shape."""
+    return RunResult(name=name,
+                     accs=list(res.acc[seed_idx]),
+                     edge_power=res.edge_power[seed_idx][-1],
+                     is_power=res.is_power[seed_idx][-1],
+                     seconds=res.seconds)
+
+
+def run_schemes(named_scenarios: Sequence, seed: int = 0) -> List[RunResult]:
+    """Run [(display_name, Scenario), ...] for one seed each and adapt
+    to RunResults (the figure benchmarks' shape)."""
+    runner = SweepRunner([sc for _, sc in named_scenarios], seeds=[seed])
+    results = runner.run()
+    return [to_run_result(name, res)
+            for (name, _), res in zip(named_scenarios, results)]
 
 
 def csv_line(name: str, us_per_call: float, derived: str) -> str:

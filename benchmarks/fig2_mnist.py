@@ -1,6 +1,10 @@
 """Paper Fig. 2: MNIST-shaped task, W-HFL I in {1,2,4} vs conventional
 FL vs error-free baselines, three data distributions.
 
+Thin wrapper over the `repro.sim` scenario registry: each scheme is a
+registered scenario (fig2_<dist>[_I2|_I4|_conventional|_ideal|...]),
+executed by `SweepRunner`.
+
 Claims validated (relative orderings at matched edge power):
   (a) i.i.d., tau=1: W-HFL > conventional FL; smaller I better (Fig 2a).
   (b) non-i.i.d. MUs, tau=3: larger I closes the gap / wins (Fig 2b).
@@ -8,46 +12,36 @@ Claims validated (relative orderings at matched edge power):
 """
 from __future__ import annotations
 
-import time
-from typing import Dict, List
+from typing import List, Optional
 
-import jax
-import jax.numpy as jnp
+from benchmarks.common import RunResult, run_schemes
+from repro.sim import FIG2_FAMILIES, get_scenario
 
-from benchmarks.common import PARTITIONERS, RunResult, run_scheme
-from repro.data import synthetic_mnist
-from repro.models.paper_models import mnist_apply, mnist_init
-
-
-def _loss(params, x, y, rng):
-    logits = mnist_apply(params, x)
-    onehot = jax.nn.one_hot(y, 10)
-    return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+# (benchmark display name, registry suffix)
+SCHEMES = [
+    ("whfl-I1", ""),
+    ("whfl-I2", "_I2"),
+    ("whfl-I4", "_I4"),
+    ("conventional", "_conventional"),
+    ("whfl-I1-errorfree", "_ideal"),
+    ("conv-errorfree", "_conv_ideal"),
+]
 
 
 def run(dist: str = "iid", total_IT: int = 400, n_train: int = 20000,
-        C: int = 4, M: int = 5, batch: int = 500, tau: int = 1,
-        seed: int = 0, quick: bool = False) -> List[RunResult]:
+        C: int = 4, M: int = 5, batch: int = 500,
+        tau: Optional[int] = None, seed: int = 0,
+        quick: bool = False) -> List[RunResult]:
     if quick:
         total_IT, n_train, batch = 40, 6000, 128
-    (xtr, ytr), (xte, yte) = synthetic_mnist(seed, n_train=n_train,
-                                             n_test=2000)
-    X, Y = PARTITIONERS[dist](seed, xtr, ytr, C, M)
-    if dist == "noniid" and tau == 1:
-        tau = 3  # paper Fig 2b uses tau=3 for the non-iid MU case
-    common = dict(init_fn=mnist_init, apply_fn=mnist_apply, loss_fn=_loss,
-                  X=X, Y=Y, xte=xte, yte=yte, batch=batch, tau=tau,
-                  total_IT=total_IT, seed=seed, sigma_z2=10.0)
-    runs = []
-    for I in (1, 2, 4):
-        runs.append(run_scheme(name=f"whfl-I{I}", I=I, **common))
-    runs.append(run_scheme(name="conventional", I=1, mode="conventional",
-                           **common))
-    runs.append(run_scheme(name="whfl-I1-errorfree", I=1,
-                           ota_mode="ideal", **common))
-    runs.append(run_scheme(name="conv-errorfree", I=1, mode="conventional",
-                           ota_mode="ideal", **common))
-    return runs
+    overrides = dict(total_IT=total_IT, n_train=n_train, C=C, M=M,
+                     batch=batch, data_seed=seed, n_test=2000)
+    if tau is not None:
+        overrides["tau"] = tau
+    named = [(name,
+              get_scenario(FIG2_FAMILIES[dist] + suffix).replace(**overrides))
+             for name, suffix in SCHEMES]
+    return run_schemes(named, seed=seed)
 
 
 def main(quick: bool = True):

@@ -1,42 +1,36 @@
 """Paper Fig. 3: CIFAR-shaped task (6-conv CNN, 2N=307498), i.i.d.
 distribution, tau=5 — W-HFL I in {1,2,4} vs conventional FL.
+
+Thin wrapper over the `repro.sim` scenario registry (fig3_cifar*).
 """
 from __future__ import annotations
 
 from typing import List
 
-import jax
-import jax.numpy as jnp
+from benchmarks.common import RunResult, run_schemes
+from repro.sim import get_scenario
 
-from benchmarks.common import PARTITIONERS, RunResult, run_scheme
-from repro.data import synthetic_cifar
-from repro.models.paper_models import cifar_apply, cifar_init
-
-
-def _loss(params, x, y, rng):
-    logits = cifar_apply(params, x, train=True, rng=rng)
-    onehot = jax.nn.one_hot(y, 10)
-    return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+SCHEMES = [
+    ("whfl-I1", ""),
+    ("whfl-I2", "_I2"),
+    ("whfl-I4", "_I4"),
+    ("conventional", "_conventional"),
+]
 
 
 def run(total_IT: int = 400, n_train: int = 20000, C: int = 4, M: int = 5,
         batch: int = 128, tau: int = 5, seed: int = 0,
         quick: bool = False) -> List[RunResult]:
+    n_test, eval_every = 1000, 1
     if quick:
         total_IT, n_train, batch, tau, C, M = 8, 1600, 32, 2, 2, 2
-    (xtr, ytr), (xte, yte) = synthetic_cifar(seed, n_train=n_train,
-                                             n_test=1000 if not quick else 400)
-    X, Y = PARTITIONERS["iid"](seed, xtr, ytr, C, M)
-    common = dict(init_fn=cifar_init, apply_fn=cifar_apply, loss_fn=_loss,
-                  X=X, Y=Y, xte=xte, yte=yte, batch=batch, tau=tau,
-                  total_IT=total_IT, seed=seed, sigma_z2=1.0, lr=1e-3,
-                  eval_every=4 if quick else 1)
-    runs = []
-    for I in (1, 2, 4):
-        runs.append(run_scheme(name=f"whfl-I{I}", I=I, **common))
-    runs.append(run_scheme(name="conventional", I=1, mode="conventional",
-                           **common))
-    return runs
+        n_test, eval_every = 400, 4
+    overrides = dict(total_IT=total_IT, n_train=n_train, C=C, M=M,
+                     batch=batch, tau=tau, data_seed=seed, n_test=n_test,
+                     eval_every=eval_every)
+    named = [(name, get_scenario("fig3_cifar" + suffix).replace(**overrides))
+             for name, suffix in SCHEMES]
+    return run_schemes(named, seed=seed)
 
 
 def main(quick: bool = True):

@@ -24,30 +24,49 @@ def _bench(f, *args, n=5) -> float:
     return (time.time() - t0) / n
 
 
-def main(quick: bool = True) -> List[str]:
+def main(quick: bool = True, smoke: bool = False) -> List[str]:
     lines = []
     shapes = [(20, 100, 3925), (4, 100, 3925)]  # MNIST: C*M users, IS hop
-    if not quick:
+    if smoke:
+        shapes = [(4, 8, 512)]                  # CI: seconds, interpret-safe
+    elif not quick:
         shapes.append((20, 100, 153749))        # CIFAR model size
     rng = np.random.default_rng(0)
     for (U, K, N) in shapes:
-        h = jnp.asarray((rng.standard_normal((U, K, N))
-                         + 1j * rng.standard_normal((U, K, N))
-                         ).astype(np.complex64))
-        t = jnp.asarray((rng.standard_normal((U, N))
-                         + 1j * rng.standard_normal((U, N))
-                         ).astype(np.complex64))
-        z = jnp.asarray((rng.standard_normal((K, N))
-                         + 1j * rng.standard_normal((K, N))
-                         ).astype(np.complex64))
+        h, t, z = _make_inputs(rng, U, K, N)
         f_ref = jax.jit(lambda a, b, c: mf_combine(a, b, c, use_kernel=False))
         dt = _bench(f_ref, h, t, z, n=3)
         gflops = 8.0 * U * K * N / dt / 1e9  # ~8 flops per (u,k,n) cmac
         lines.append(f"kernel/ref_U{U}_K{K}_N{N},{1e6 * dt:.1f},"
                      f"gflops={gflops:.2f}")
+    if smoke:
+        # CI correctness gate: Pallas kernel (interpret mode on CPU)
+        # against the jnp oracle.
+        h, t, z = _make_inputs(np.random.default_rng(1), 4, 8, 512)
+        y_k = mf_combine(h, t, z, use_kernel=True)
+        y_r = mf_combine(h, t, z, use_kernel=False)
+        err = float(jnp.max(jnp.abs(y_k - y_r)))
+        assert err < 1e-2 * float(jnp.max(jnp.abs(y_r))), err
+        lines.append(f"kernel/smoke_interpret,0.0,max_abs_err={err:.2e};"
+                     "ok=True")
     return lines
 
 
+def _make_inputs(rng, U: int, K: int, N: int):
+    cx = lambda *shape: jnp.asarray(
+        (rng.standard_normal(shape)
+         + 1j * rng.standard_normal(shape)).astype(np.complex64))
+    return cx(U, K, N), cx(U, N), cx(K, N)
+
+
 if __name__ == "__main__":
-    for ln in main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny shape + a Pallas-interpret vs oracle "
+                         "correctness check")
+    args = ap.parse_args()
+    for ln in main(quick=not args.full, smoke=args.smoke):
         print(ln)

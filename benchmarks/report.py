@@ -96,7 +96,41 @@ def roofline_table(single) -> str:
     return "\n".join(lines)
 
 
+def sweep_table(doc) -> str:
+    """Markdown table for a `repro.sim.sweep` JSON document (the sweep
+    engine's structured output; see SCHEMA_VERSION there)."""
+    lines = [
+        "| scenario | dist | tau | I | mode | seeds | final acc | ± | edge power | compiles |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in doc.get("scenarios", []):
+        sc = rec["scenario"]
+        fin = rec["final"]
+        lines.append(
+            f"| {sc['name']} | {sc['partition']} | {sc['tau']} | {sc['I']} "
+            f"| {sc['mode']}/{sc['ota_mode']} | {len(rec['seeds'])} "
+            f"| {fin['acc_mean']:.3f} | {fin['acc_std']:.3f} "
+            f"| {fin['edge_power']:.2e} | {rec['n_traces']} |")
+    lines.append("")
+    lines.append("One `compiles` per scenario: the seed batch shares a "
+                 "single trace of the round function (repro.sim.sweep).")
+    return "\n".join(lines)
+
+
 def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", default=None, metavar="SWEEP_JSON",
+                    help="render a repro.sim.sweep JSON document as a "
+                         "markdown table instead of regenerating "
+                         "EXPERIMENTS.md")
+    args = ap.parse_args()
+    if args.sweep:
+        with open(args.sweep) as f:
+            print(sweep_table(json.load(f)))
+        return
+
     single = load_records(os.path.join(ROOT, "results",
                                        "dryrun_baseline.jsonl"))
     multi = load_records(os.path.join(ROOT, "results",

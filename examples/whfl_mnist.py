@@ -1,82 +1,77 @@
 """End-to-end driver reproducing the paper's Fig. 2 protocol.
 
-Full paper setting: C=4 clusters x M=5 MUs, K=K'=100 rx antennas,
-P_t = 1 + 1e-2 t, P_IS = 20 P_t, sigma_z^2 = 10, normalized time IT,
-three data distributions, W-HFL I in {1,2,4} + conventional FL +
-error-free baselines, with per-round accuracy logging, checkpointing
-and the §V power table.
+Thin CLI over the `repro.sim` scenario registry + sweep engine: the
+full paper setting (C=4 x M=5, K=K'=100, P_t = 1 + 1e-2 t,
+P_IS = 20 P_t, sigma_z^2 = 10, normalized time IT) for the three data
+distributions, W-HFL I in {1,2,4} + conventional FL + error-free
+baselines — all seeds per scheme batched into ONE compiled round
+function by `SweepRunner`.
 
     PYTHONPATH=src python examples/whfl_mnist.py \
-        --dist iid --IT 400 --out results/fig2_iid.json
+        --dist iid --IT 400 --seeds 3 --out results/fig2_iid.json
 """
 import argparse
 import json
 import os
 import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.common import PARTITIONERS, run_scheme
-from repro import checkpoint as ckpt
-from repro.data import synthetic_mnist
-from repro.models.paper_models import mnist_apply, mnist_init
-
-
-def loss_fn(params, x, y, rng):
-    logits = mnist_apply(params, x)
-    onehot = jax.nn.one_hot(y, 10)
-    return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+from benchmarks.fig2_mnist import SCHEMES
+from repro.sim import (FIG2_FAMILIES, SweepRunner, get_scenario,
+                       sweep_to_json)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--dist", default="iid", choices=list(PARTITIONERS))
+    ap.add_argument("--dist", default="iid", choices=sorted(FIG2_FAMILIES))
     ap.add_argument("--IT", type=int, default=400)
-    ap.add_argument("--tau", type=int, default=1)
+    ap.add_argument("--tau", type=int, default=None)
     ap.add_argument("--C", type=int, default=4)
     ap.add_argument("--M", type=int, default=5)
     ap.add_argument("--batch", type=int, default=500)
     ap.add_argument("--n-train", type=int, default=20000)
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="data/geometry seed and first training seed")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="training seeds per scheme (vmapped, one compile)")
     ap.add_argument("--ota", default="equivalent",
                     choices=["equivalent", "faithful", "ideal"])
+    ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
-    (xtr, ytr), (xte, yte) = synthetic_mnist(args.seed,
-                                             n_train=args.n_train,
-                                             n_test=4000)
-    X, Y = PARTITIONERS[args.dist](args.seed, xtr, ytr, args.C, args.M)
-    tau = 3 if (args.dist == "noniid" and args.tau == 1) else args.tau
+    overrides = dict(total_IT=args.IT, C=args.C, M=args.M, batch=args.batch,
+                     n_train=args.n_train, n_test=4000, data_seed=args.seed)
+    if args.tau is not None:
+        overrides["tau"] = args.tau
 
-    results = {}
-    schemes = ([(f"whfl-I{I}", dict(I=I)) for I in (1, 2, 4)]
-               + [("conventional", dict(I=1, mode="conventional")),
-                  ("whfl-errorfree", dict(I=1, ota_mode="ideal")),
-                  ("conv-errorfree",
-                   dict(I=1, mode="conventional", ota_mode="ideal"))])
-    for name, kw in schemes:
-        kw.setdefault("ota_mode", args.ota)
-        r = run_scheme(name=name, init_fn=mnist_init, apply_fn=mnist_apply,
-                       loss_fn=loss_fn, X=X, Y=Y, xte=xte, yte=yte,
-                       batch=args.batch, tau=tau, total_IT=args.IT,
-                       seed=args.seed, sigma_z2=10.0, **kw)
-        results[name] = {
-            "accs": r.accs, "edge_power": r.edge_power,
-            "is_power": r.is_power, "seconds": r.seconds,
-        }
-        print(f"{name:18s} final_acc={r.final_acc:.4f} "
-              f"edge_power={r.edge_power:.4f} ({r.seconds:.0f}s)")
+    named = []
+    for name, suffix in SCHEMES:
+        sc = get_scenario(FIG2_FAMILIES[args.dist] + suffix).replace(**overrides)
+        if sc.ota_mode != "ideal":  # keep the error-free baselines ideal
+            sc = sc.replace(ota_mode=args.ota)
+        named.append((name, sc))
+
+    seeds = list(range(args.seed, args.seed + args.seeds))
+    runner = SweepRunner([sc for _, sc in named], seeds=seeds,
+                         quick=args.quick)
+    results = runner.run()
+
+    out_doc = sweep_to_json(results, quick=args.quick)
+    for (name, _), res in zip(named, results):
+        rec = res.to_record()
+        fin = rec["final"]
+        print(f"{name:18s} final_acc={fin['acc_mean']:.4f}"
+              f"±{fin['acc_std']:.4f} "
+              f"edge_power={fin['edge_power']:.4f} ({res.seconds:.0f}s, "
+              f"{res.n_traces} compile)")
 
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
-            json.dump({"dist": args.dist, "IT": args.IT, "tau": tau,
-                       "results": results}, f, indent=1)
+            json.dump({"dist": args.dist, **out_doc}, f, indent=1)
         print("wrote", args.out)
 
 

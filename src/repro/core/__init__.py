@@ -1,7 +1,8 @@
 # The paper's primary contribution: W-HFL — hierarchical over-the-air
 # federated learning (OTA aggregation at both the cluster and global hop).
 from repro.core.topology import Topology, random_topology, uniform_topology
-from repro.core.channel import OTAConfig, cluster_ota, global_ota, conventional_ota
+from repro.core.channel import (OTAConfig, cluster_ota, global_ota,
+                                conventional_ota, vmap_seeds)
 from repro.core import aggregation, bound, whfl
 
 __all__ = [
@@ -12,6 +13,7 @@ __all__ = [
     "cluster_ota",
     "global_ota",
     "conventional_ota",
+    "vmap_seeds",
     "aggregation",
     "bound",
     "whfl",

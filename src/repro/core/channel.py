@@ -35,6 +35,25 @@ class OTAConfig:
     use_kernel: bool = False  # use the Pallas ota_combine kernel
 
 
+def vmap_seeds(hop_fn):
+    """Lift an OTA hop over a leading seed/realization axis.
+
+    ``hop_fn(key, deltas, topo, P, cfg) -> est`` (any of `cluster_ota`,
+    `global_ota`, `conventional_ota`) becomes a function taking keys
+    ``[S, 2]`` and deltas with a leading ``S`` axis, drawing S
+    independent channel/noise realizations in one traced computation.
+    Geometry, power and config are shared across the batch; per-seed
+    results equal S independent calls (the draws depend only on the
+    per-seed key).  This demonstrates, at the single-hop level, the
+    property the sweep engine relies on when it vmaps the whole round
+    function over seeds (repro.sim.sweep; pinned by tests/test_sweep).
+    """
+    def batched(keys, deltas, topo, P, cfg: OTAConfig = OTAConfig()):
+        return jax.vmap(lambda k, d: hop_fn(k, d, topo, P, cfg))(keys,
+                                                                 deltas)
+    return batched
+
+
 def _chunk(K: int, ck: int) -> int:
     """Largest divisor of K that is <= ck."""
     ck = max(1, min(ck, K))

@@ -8,9 +8,14 @@ Per global round t:
   - ISs OTA-transmit their accumulated deltas to the PS, which closes
     the round (eqs. 15-18).
 
-The whole round is one jitted function; MU training is vmapped over
-(cluster, user).  Baselines: `mode="conventional"` (single-hop OTA FL,
-the paper's main comparison) and `OTAConfig(mode="ideal")` (error-free).
+The whole round is one *pure* jitted function of
+``(state, key, P_t, P_is_t)`` built by `make_round_fn`; MU training is
+vmapped over (cluster, user), and the round itself can be vmapped over
+a leading seed axis (stacked states + per-seed keys) without
+re-tracing — this is what `repro.sim.SweepRunner` does to run S seeds
+in one compilation.  Baselines: `mode="conventional"` (single-hop OTA
+FL, the paper's main comparison) and `OTAConfig(mode="ideal")`
+(error-free).
 """
 from __future__ import annotations
 
@@ -42,8 +47,132 @@ class WHFLConfig:
     power_low: bool = False      # P_t,low = 0.5 P_t (paper's I=1 runs)
 
 
+def init_round_state(params, opt: Optimizer, C: int, M: int):
+    """Fresh per-run trainer state for `make_round_fn` round functions."""
+    opt0 = opt.init(params)
+    opt_state = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (C, M) + x.shape).copy(), opt0)
+    return {
+        "theta": params,
+        "opt": opt_state,
+        "t": jnp.zeros((), jnp.int32),
+        "power_edge": jnp.zeros(()),   # sum of per-symbol tx power, edge
+        "power_is": jnp.zeros(()),     # same, IS->PS hop
+        "n_edge_tx": jnp.zeros(()),    # transmissions counted
+        "n_is_tx": jnp.zeros(()),
+    }
+
+
+def make_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
+                  cfg: WHFLConfig, spec: agg.FlatSpec, X, Y,
+                  trace_counter: Optional[list] = None) -> Callable:
+    """Build the pure per-round function ``round_fn(state, key, P_t,
+    P_is_t) -> state``.
+
+    Everything static (data shards, topology geometry, config, flat
+    spec) is closed over; the returned function touches no mutable
+    state, so it can be wrapped in `jax.jit` once and additionally
+    lifted with `jax.vmap` over a leading seed axis of ``(state, key)``
+    — S seeds share one trace/compile.
+
+    `trace_counter`, when given, is a list whose first element is
+    incremented every time the function is *traced* (not executed) —
+    tests use it to assert the one-compilation property of the sweep
+    engine.
+    """
+    C, M = topo.C, topo.M
+    X = jnp.asarray(X)
+    Y = jnp.asarray(Y)
+
+    def local_train(theta, opt_state, x, y, key, step):
+        """One MU's tau local steps; vmapped over (cluster, user)."""
+        def body(carry, k):
+            th, st = carry
+            kb, kd = jax.random.split(k)
+            idx = jax.random.randint(kb, (cfg.batch,), 0, x.shape[0])
+            grads = jax.grad(loss_fn)(th, x[idx], y[idx], kd)
+            upd, st = opt.update(grads, st, th, step)
+            return (apply_updates(th, upd), st), None
+
+        keys = jax.random.split(key, cfg.tau)
+        (th, st), _ = jax.lax.scan(body, (theta, opt_state), keys)
+        delta = jax.tree.map(lambda a, b: a - b, th, theta)
+        return delta, st
+
+    def users_train(theta_IS, opt_state, key, step):
+        """theta_IS: [C]-stacked cluster models -> flat deltas [C,M,2N]."""
+        keys = jax.random.split(key, C * M).reshape(C, M, 2)
+        train_u = lambda th, st, x, y, k: local_train(th, st, x, y, k, step)
+        train_c = jax.vmap(train_u, in_axes=(None, 0, 0, 0, 0))
+        deltas, opt_state = jax.vmap(train_c)(theta_IS, opt_state, X, Y,
+                                              keys)
+        flat = jax.vmap(jax.vmap(lambda d: agg.flatten(spec, d)))(deltas)
+        return flat, opt_state
+
+    def round_fn(state, key, P_t, P_is_t):
+        if trace_counter is not None:
+            trace_counter[0] += 1  # python side effect: runs at trace time
+        theta = state["theta"]
+        step = state["t"]
+
+        if cfg.mode == "conventional":
+            theta_IS = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (C,) + x.shape), theta)
+            k1, k2 = jax.random.split(key)
+            flat, opt_state = users_train(theta_IS, state["opt"], k1, step)
+            est = conventional_ota(k2, flat, topo, P_t, cfg.ota)
+            theta = apply_updates(theta, agg.unflatten(spec, est))
+            p_edge = agg.symbol_power(flat, P_t)
+            return {**state, "theta": theta, "opt": opt_state,
+                    "t": step + 1,
+                    "power_edge": state["power_edge"] + p_edge,
+                    "n_edge_tx": state["n_edge_tx"] + 1.0,
+                    "power_is": state["power_is"],
+                    "n_is_tx": state["n_is_tx"]}
+
+        # --- W-HFL ---
+        theta_IS = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (C,) + x.shape), theta)
+
+        def cluster_iter(carry, k):
+            th_IS, opt_state, p_acc = carry
+            k1, k2 = jax.random.split(k)
+            flat, opt_state = users_train(th_IS, opt_state, k1, step)
+            est = cluster_ota(k2, flat, topo, P_t, cfg.ota)  # [C, 2N]
+            th_IS = jax.vmap(
+                lambda th, e: apply_updates(th, agg.unflatten(spec, e))
+            )(th_IS, est)
+            return (th_IS, opt_state,
+                    p_acc + agg.symbol_power(flat, P_t)), None
+
+        keys = jax.random.split(key, cfg.I + 1)
+        (theta_IS, opt_state, p_edge), _ = jax.lax.scan(
+            cluster_iter, (theta_IS, state["opt"], jnp.zeros(())),
+            keys[: cfg.I])
+
+        is_deltas = jax.vmap(
+            lambda th: agg.flatten(
+                spec, jax.tree.map(lambda a, b: a - b, th, theta)))(theta_IS)
+        est = global_ota(keys[-1], is_deltas, topo, P_is_t, cfg.ota)
+        theta = apply_updates(theta, agg.unflatten(spec, est))
+        p_is = agg.symbol_power(is_deltas, P_is_t)
+        return {**state, "theta": theta, "opt": opt_state, "t": step + 1,
+                "power_edge": state["power_edge"] + p_edge,
+                "n_edge_tx": state["n_edge_tx"] + float(cfg.I),
+                "power_is": state["power_is"] + p_is,
+                "n_is_tx": state["n_is_tx"] + 1.0}
+
+    return round_fn
+
+
 class WHFLTrainer:
-    """loss_fn(params, xb, yb, rng) -> scalar; data X/Y: [C, M, n, ...]."""
+    """loss_fn(params, xb, yb, rng) -> scalar; data X/Y: [C, M, n, ...].
+
+    Thin stateful wrapper over `make_round_fn`: owns the jitted round
+    and the power schedule.  `round_fn` (available after `init_state`)
+    is the underlying pure function, for callers that batch it
+    themselves (see `repro.sim.sweep`).
+    """
 
     def __init__(self, loss_fn: Callable, local_opt: Optimizer,
                  topo: Topology, cfg: WHFLConfig, X: np.ndarray,
@@ -56,105 +185,19 @@ class WHFLTrainer:
         self.Y = jnp.asarray(Y)
         self.C, self.M = topo.C, topo.M
         self._spec = None
-        self._round = jax.jit(self._round_impl)
+        self.round_fn: Optional[Callable] = None
+        self._round = None
 
     # -- state ---------------------------------------------------------------
 
     def init_state(self, params):
-        self._spec = agg.make_flat_spec(params)
-        C, M = self.C, self.M
-        opt0 = self.opt.init(params)
-        opt = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (C, M) + x.shape).copy(), opt0)
-        return {
-            "theta": params,
-            "opt": opt,
-            "t": jnp.zeros((), jnp.int32),
-            "power_edge": jnp.zeros(()),   # sum of per-symbol tx power, edge
-            "power_is": jnp.zeros(()),     # same, IS->PS hop
-            "n_edge_tx": jnp.zeros(()),    # transmissions counted
-            "n_is_tx": jnp.zeros(()),
-        }
-
-    # -- one MU's local training (vmapped over C, M) --------------------------
-
-    def _local_train(self, theta, opt_state, x, y, key, step):
-        def body(carry, k):
-            th, st = carry
-            kb, kd = jax.random.split(k)
-            idx = jax.random.randint(kb, (self.cfg.batch,), 0, x.shape[0])
-            grads = jax.grad(self.loss_fn)(th, x[idx], y[idx], kd)
-            upd, st = self.opt.update(grads, st, th, step)
-            return (apply_updates(th, upd), st), None
-
-        keys = jax.random.split(key, self.cfg.tau)
-        (th, st), _ = jax.lax.scan(body, (theta, opt_state), keys)
-        delta = jax.tree.map(lambda a, b: a - b, th, theta)
-        return delta, st
-
-    # -- one global round ------------------------------------------------------
-
-    def _round_impl(self, state, key, P_t, P_is_t):
-        C, M, cfg, spec = self.C, self.M, self.cfg, self._spec
-        theta = state["theta"]
-        step = state["t"]
-
-        def users_train(theta_IS, opt, key):
-            """theta_IS: [C]-stacked cluster models -> flat deltas [C,M,2N]."""
-            keys = jax.random.split(key, C * M).reshape(C, M, 2)
-            train_u = lambda th, st, x, y, k: self._local_train(
-                th, st, x, y, k, step)
-            train_c = jax.vmap(train_u, in_axes=(None, 0, 0, 0, 0))
-            deltas, opt = jax.vmap(train_c)(theta_IS, opt, self.X, self.Y,
-                                            keys)
-            flat = jax.vmap(jax.vmap(lambda d: agg.flatten(spec, d)))(deltas)
-            return flat, opt
-
-        if cfg.mode == "conventional":
-            theta_IS = jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (C,) + x.shape), theta)
-            k1, k2 = jax.random.split(key)
-            flat, opt = users_train(theta_IS, state["opt"], k1)
-            est = conventional_ota(k2, flat, self.topo, P_t, cfg.ota)
-            theta = apply_updates(theta, agg.unflatten(spec, est))
-            p_edge = agg.symbol_power(flat, P_t)
-            return {**state, "theta": theta, "opt": opt,
-                    "t": step + 1,
-                    "power_edge": state["power_edge"] + p_edge,
-                    "n_edge_tx": state["n_edge_tx"] + 1.0,
-                    "power_is": state["power_is"],
-                    "n_is_tx": state["n_is_tx"]}
-
-        # --- W-HFL ---
-        theta_IS = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (C,) + x.shape), theta)
-
-        def cluster_iter(carry, k):
-            th_IS, opt, p_acc = carry
-            k1, k2 = jax.random.split(k)
-            flat, opt = users_train(th_IS, opt, k1)
-            est = cluster_ota(k2, flat, self.topo, P_t, cfg.ota)  # [C, 2N]
-            th_IS = jax.vmap(
-                lambda th, e: apply_updates(th, agg.unflatten(spec, e))
-            )(th_IS, est)
-            return (th_IS, opt, p_acc + agg.symbol_power(flat, P_t)), None
-
-        keys = jax.random.split(key, cfg.I + 1)
-        (theta_IS, opt, p_edge), _ = jax.lax.scan(
-            cluster_iter, (theta_IS, state["opt"], jnp.zeros(())),
-            keys[: cfg.I])
-
-        is_deltas = jax.vmap(
-            lambda th: agg.flatten(
-                spec, jax.tree.map(lambda a, b: a - b, th, theta)))(theta_IS)
-        est = global_ota(keys[-1], is_deltas, self.topo, P_is_t, cfg.ota)
-        theta = apply_updates(theta, agg.unflatten(spec, est))
-        p_is = agg.symbol_power(is_deltas, P_is_t)
-        return {**state, "theta": theta, "opt": opt, "t": step + 1,
-                "power_edge": state["power_edge"] + p_edge,
-                "n_edge_tx": state["n_edge_tx"] + float(cfg.I),
-                "power_is": state["power_is"] + p_is,
-                "n_is_tx": state["n_is_tx"] + 1.0}
+        spec = agg.make_flat_spec(params)
+        if spec != self._spec:  # (re)build on first use or new model shape
+            self._spec = spec
+            self.round_fn = make_round_fn(self.loss_fn, self.opt, self.topo,
+                                          self.cfg, spec, self.X, self.Y)
+            self._round = jax.jit(self.round_fn)
+        return init_round_state(params, self.opt, self.C, self.M)
 
     # -- public API ------------------------------------------------------------
 

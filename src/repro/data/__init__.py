@@ -1,9 +1,11 @@
 from repro.data.datasets import synthetic_mnist, synthetic_cifar, lm_corpus
 from repro.data.partition import (
+    PARTITIONERS, get_partitioner,
     partition_iid, partition_noniid_shards, partition_cluster_noniid,
 )
 
 __all__ = [
     "synthetic_mnist", "synthetic_cifar", "lm_corpus",
+    "PARTITIONERS", "get_partitioner",
     "partition_iid", "partition_noniid_shards", "partition_cluster_noniid",
 ]

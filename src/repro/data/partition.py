@@ -83,3 +83,21 @@ def partition_cluster_noniid(seed: int, X: np.ndarray, Y: np.ndarray,
             xs.append(X[p])
             ys.append(Y[p])
     return _stack_users(xs, ys, C, M)
+
+
+# Canonical partitioner registry (paper §V names).  Scenario specs and
+# the benchmark harness address partitioners through this table so a new
+# data distribution is one entry + one function.
+PARTITIONERS = {
+    "iid": partition_iid,
+    "noniid": partition_noniid_shards,
+    "cluster-noniid": partition_cluster_noniid,
+}
+
+
+def get_partitioner(name: str):
+    try:
+        return PARTITIONERS[name]
+    except KeyError:
+        raise KeyError(f"unknown partition {name!r}; "
+                       f"known: {sorted(PARTITIONERS)}") from None

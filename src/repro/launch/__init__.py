@@ -1,3 +1,17 @@
-from repro.launch.mesh import make_production_mesh, refine_mesh, mesh_counts
+"""Launch-layer namespace.
 
-__all__ = ["make_production_mesh", "refine_mesh", "mesh_counts"]
+Mesh machinery is imported lazily: test collection (and anything that
+only needs `launch.serve`/`launch.hlo`) must not pull in device-mesh
+construction, whose jax surface varies across versions.
+"""
+
+_MESH_EXPORTS = ("make_production_mesh", "refine_mesh", "mesh_counts")
+
+__all__ = list(_MESH_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _MESH_EXPORTS:
+        from repro.launch import mesh
+        return getattr(mesh, name)
+    raise AttributeError(f"module 'repro.launch' has no attribute {name!r}")

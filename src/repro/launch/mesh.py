@@ -12,7 +12,15 @@ from typing import Optional, Tuple
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+# `AxisType` only exists on newer jax (>= 0.5); older installs get the
+# plain-Mesh behaviour (every axis implicitly Auto), which is what the
+# refinement needs anyway.
+try:
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -38,8 +46,10 @@ def refine_mesh(mesh, *, users_per_cluster: int = 4):
     if n_data % M:
         raise ValueError(f"data axis {n_data} not divisible by M={M}")
     devs = devs.reshape(n_pod, n_data // M, M, n_model)
-    return Mesh(devs, ("pod", "cluster", "user", "model"),
-                axis_types=(AxisType.Auto,) * 4)
+    names = ("pod", "cluster", "user", "model")
+    if AxisType is None:
+        return Mesh(devs, names)
+    return Mesh(devs, names, axis_types=(AxisType.Auto,) * 4)
 
 
 def mesh_counts(mesh, users_per_cluster: int = 4) -> Tuple[int, int, int]:

@@ -42,7 +42,8 @@ from repro.launch.mesh import mesh_counts, refine_mesh
 from repro.models import lm
 from repro.nn.core import split_params
 from repro.optim import adamw, sgd
-from repro.sharding import Rules, make_rules, param_sharding_tree, set_rules
+from repro.sharding import (Rules, make_rules, param_sharding_tree,
+                            set_rules, shard_map)
 
 
 @dataclass(frozen=True)
@@ -237,7 +238,7 @@ def build_train_step(cfg: ArchConfig, shape: InputShape, mesh,
             return new_params, new_opt, metrics_out
 
     manual = {"pod", "cluster", "user"}
-    sharded_step = jax.shard_map(
+    sharded_step = shard_map(
         per_user_step, mesh=rmesh,
         in_specs=(P(), P(), P(("pod", "cluster", "user")), P(), P()),
         out_specs=(P(), P(), P()),

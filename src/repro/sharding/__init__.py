@@ -4,12 +4,14 @@ from repro.sharding.api import (
     set_rules,
     current_rules,
     make_rules,
+    shard_map,
     spec_for,
     param_sharding_tree,
 )
 
 __all__ = [
     "Rules",
+    "shard_map",
     "logical",
     "set_rules",
     "current_rules",

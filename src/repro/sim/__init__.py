@@ -1,0 +1,31 @@
+"""Batched scenario-sweep engine.
+
+`Scenario` declaratively specifies one experimental condition of the
+paper (dataset, partition, topology, W-HFL config, OTA mode);
+`SCENARIOS`/`get_scenario` is the registry of named paper scenarios
+(Fig. 2 MNIST, Fig. 3 CIFAR, conventional/ideal baselines);
+`SweepRunner` runs N seeds x M scenarios as one vmapped, once-compiled
+computation per scenario and emits structured JSON.
+
+    python -m repro.sim.sweep --scenarios fig2_iid,fig2_noniid --seeds 5
+"""
+from repro.sim.scenario import (FIG2_FAMILIES, SCENARIOS, Scenario,
+                                get_scenario, list_scenarios,
+                                register_scenario)
+
+_SWEEP_EXPORTS = ("SweepRunner", "SweepResult", "sweep_to_json",
+                  "csv_lines", "SCHEMA_VERSION")
+
+__all__ = [
+    "Scenario", "SCENARIOS", "FIG2_FAMILIES", "get_scenario",
+    "list_scenarios", "register_scenario", *_SWEEP_EXPORTS,
+]
+
+
+def __getattr__(name):
+    # sweep is imported lazily so `python -m repro.sim.sweep` does not
+    # re-execute the module it was launched from (runpy double-import).
+    if name in _SWEEP_EXPORTS:
+        from repro.sim import sweep
+        return getattr(sweep, name)
+    raise AttributeError(f"module 'repro.sim' has no attribute {name!r}")

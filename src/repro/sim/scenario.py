@@ -1,0 +1,191 @@
+"""Scenario specs + the registry of named paper scenarios.
+
+A `Scenario` pins everything that defines one experimental condition:
+the task (dataset/model/loss), the federated data partition, the
+network topology, the W-HFL protocol config (tau, I, mode) and the OTA
+channel mode.  Seeds are deliberately *not* part of a scenario — the
+sweep engine supplies them, vmapping the round function over a seed
+batch (model init + minibatch sampling + channel noise all follow the
+per-seed key; geometry and the data partition follow `data_seed` so
+the whole batch shares one trace).
+
+Adding a scenario is one `register_scenario(Scenario(...))` call — see
+the Fig. 2 / Fig. 3 definitions at the bottom for the idiom.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import OTAConfig, random_topology, uniform_topology
+from repro.core.topology import Topology
+from repro.core.whfl import WHFLConfig
+from repro.data import (get_partitioner, synthetic_cifar, synthetic_mnist)
+from repro.models.paper_models import (cifar_apply, cifar_init, mnist_apply,
+                                       mnist_init)
+
+
+def _xent(apply_fn, train: bool):
+    def loss(params, x, y, rng):
+        if train:
+            logits = apply_fn(params, x, train=True, rng=rng)
+        else:
+            logits = apply_fn(params, x)
+        onehot = jax.nn.one_hot(y, 10)
+        return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
+    return loss
+
+
+# dataset -> (init_fn, apply_fn, loss_fn, make_data)
+TASKS: Dict[str, Tuple] = {
+    "mnist": (mnist_init, mnist_apply, _xent(mnist_apply, train=False),
+              synthetic_mnist),
+    "cifar": (cifar_init, cifar_apply, _xent(cifar_apply, train=True),
+              synthetic_cifar),
+}
+
+
+@dataclass(frozen=True)
+class Scenario:
+    name: str
+    dataset: str = "mnist"           # key into TASKS
+    partition: str = "iid"           # key into data.PARTITIONERS
+    # protocol
+    tau: int = 1
+    I: int = 1
+    batch: int = 500
+    mode: str = "whfl"               # "whfl" | "conventional"
+    ota_mode: str = "equivalent"     # "equivalent" | "faithful" | "ideal"
+    # topology (paper §V defaults)
+    topology: str = "random"         # "random" | "uniform"
+    C: int = 4
+    M: int = 5
+    K: int = 100
+    K_ps: int = 100
+    sigma_z2: float = 10.0
+    # training schedule
+    total_IT: int = 400              # normalized time; rounds T = IT / I
+    lr: float = 5e-2
+    opt: str = "adam"                # "adam" | "sgd"
+    n_train: int = 20000
+    n_test: int = 2000
+    data_seed: int = 0               # partition + geometry seed
+    eval_every: int = 1
+
+    # -- derived ------------------------------------------------------------
+
+    @property
+    def rounds(self) -> int:
+        return max(1, self.total_IT // self.I)
+
+    def whfl_config(self) -> WHFLConfig:
+        return WHFLConfig(tau=self.tau, I=self.I, batch=self.batch,
+                          mode=self.mode, ota=OTAConfig(mode=self.ota_mode),
+                          power_low=(self.I == 1))
+
+    def make_topology(self) -> Topology:
+        if self.topology == "uniform":
+            return uniform_topology(C=self.C, M=self.M, K=self.K,
+                                    K_ps=self.K_ps, sigma_z2=self.sigma_z2)
+        return random_topology(self.data_seed, C=self.C, M=self.M, K=self.K,
+                               K_ps=self.K_ps, sigma_z2=self.sigma_z2)
+
+    def make_data(self):
+        """-> (X [C,M,n,...], Y [C,M,n], xte, yte)."""
+        _, _, _, data_fn = TASKS[self.dataset]
+        (xtr, ytr), (xte, yte) = data_fn(self.data_seed,
+                                         n_train=self.n_train,
+                                         n_test=self.n_test)
+        X, Y = get_partitioner(self.partition)(self.data_seed, xtr, ytr,
+                                               self.C, self.M)
+        return X, Y, xte, yte
+
+    def task_fns(self):
+        init_fn, apply_fn, loss_fn, _ = TASKS[self.dataset]
+        return init_fn, apply_fn, loss_fn
+
+    def replace(self, **kw) -> "Scenario":
+        return dataclasses.replace(self, **kw)
+
+    def quick(self) -> "Scenario":
+        """CI-sized variant: same structure, minutes -> seconds."""
+        kw = dict(total_IT=8 * self.I, n_train=1200, n_test=400,
+                  batch=min(self.batch, 64), C=min(self.C, 2),
+                  M=min(self.M, 2), K=min(self.K, 16),
+                  K_ps=min(self.K_ps, 16), eval_every=2)
+        if self.dataset == "cifar":
+            kw.update(tau=min(self.tau, 2), n_train=800)
+        return self.replace(**kw)
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register_scenario(sc: Scenario, overwrite: bool = False) -> Scenario:
+    if sc.name in SCENARIOS and not overwrite:
+        raise ValueError(f"scenario {sc.name!r} already registered")
+    SCENARIOS[sc.name] = sc
+    return sc
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; known: "
+                       f"{', '.join(sorted(SCENARIOS))}") from None
+
+
+def list_scenarios() -> Dict[str, Scenario]:
+    return dict(SCENARIOS)
+
+
+def _register_family(base: Scenario, cluster_iters=(1, 2, 4),
+                     baselines: bool = True) -> None:
+    """The paper's per-figure scheme family: W-HFL at I in {1,2,4} plus
+    the conventional single-hop and error-free baselines."""
+    for I in cluster_iters:
+        name = base.name if I == 1 else f"{base.name}_I{I}"
+        register_scenario(base.replace(name=name, I=I))
+    if baselines:
+        register_scenario(base.replace(name=f"{base.name}_conventional",
+                                       I=1, mode="conventional"))
+        register_scenario(base.replace(name=f"{base.name}_ideal", I=1,
+                                       ota_mode="ideal"))
+        register_scenario(base.replace(
+            name=f"{base.name}_conv_ideal", I=1, mode="conventional",
+            ota_mode="ideal"))
+
+
+# Fig. 2 — MNIST single-layer net, three data distributions.  Public
+# mapping from the paper's distribution names to the scenario family
+# base name (used by benchmarks/fig2_mnist.py and examples/).
+FIG2_FAMILIES = {
+    "iid": "fig2_iid",
+    "noniid": "fig2_noniid",
+    "cluster-noniid": "fig2_cluster_noniid",
+}
+
+_register_family(Scenario(name="fig2_iid", dataset="mnist",
+                          partition="iid", tau=1, sigma_z2=10.0))
+_register_family(Scenario(name="fig2_noniid", dataset="mnist",
+                          partition="noniid", tau=3, sigma_z2=10.0))
+_register_family(Scenario(name="fig2_cluster_noniid", dataset="mnist",
+                          partition="cluster-noniid", tau=1, sigma_z2=10.0))
+
+# Fig. 3 — CIFAR CNN, i.i.d., tau=5.
+_register_family(Scenario(name="fig3_cifar", dataset="cifar",
+                          partition="iid", tau=5, batch=128, lr=1e-3,
+                          sigma_z2=1.0, n_test=1000),
+                 baselines=True)

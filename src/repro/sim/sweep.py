@@ -1,0 +1,272 @@
+"""Batched multi-seed scenario sweeps.
+
+`SweepRunner` executes ``S seeds x M scenarios`` as M batched
+computations: per scenario, the per-seed trainer states are stacked
+along a leading axis and the pure W-HFL round function
+(`repro.core.whfl.make_round_fn`) is lifted with ``jax.vmap`` over
+``(state, key)`` — one jit trace/compile covers the whole seed batch,
+and per-seed trajectories are exactly the trajectories of S sequential
+single-seed runs (every random draw depends only on the per-seed key).
+
+Heterogeneous configs (different models, I, topologies) cannot share a
+trace, so scenarios are looped; homogeneous seeds are vmapped.
+
+    PYTHONPATH=src python -m repro.sim.sweep \
+        --scenarios fig2_iid,fig2_noniid --seeds 5 --out results/sweep.json
+
+Output is a structured JSON document (`SCHEMA_VERSION`), and
+`csv_lines` renders the benchmark-suite CSV convention
+(``name,us_per_call,derived``) from the same records.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core.topology import power_schedule
+from repro.core.whfl import init_round_state, make_round_fn
+from repro.nn.core import split_params
+from repro.optim import adam, sgd
+from repro.sim.scenario import Scenario, get_scenario, list_scenarios
+
+SCHEMA_VERSION = "repro.sim.sweep/v1"
+
+# Every per-scenario record carries exactly these keys (tests pin them).
+RECORD_KEYS = ("scenario", "seeds", "rounds", "metrics", "final",
+               "n_traces", "seconds")
+METRIC_KEYS = ("acc", "loss", "edge_power", "is_power")
+
+
+@dataclass
+class SweepResult:
+    """One scenario x seed-batch: trajectories are [S][n_evals] lists."""
+    scenario: Scenario
+    seeds: List[int]
+    rounds: List[int]                 # global-round index of each eval
+    acc: List[List[float]]
+    loss: List[List[float]]
+    edge_power: List[List[float]]     # running avg per-symbol edge power
+    is_power: List[List[float]]
+    n_traces: int                     # jit traces of the round function
+    seconds: float
+    final_state: Optional[dict] = field(default=None, repr=False)
+
+    def to_record(self) -> Dict:
+        fin = {
+            "acc_mean": float(np.mean([a[-1] for a in self.acc])),
+            "acc_std": float(np.std([a[-1] for a in self.acc])),
+            "loss_mean": float(np.mean([l[-1] for l in self.loss])),
+            "edge_power": float(np.mean([p[-1] for p in self.edge_power])),
+            "is_power": float(np.mean([p[-1] for p in self.is_power])),
+        }
+        return {
+            "scenario": self.scenario.to_json(),
+            "seeds": list(self.seeds),
+            "rounds": list(self.rounds),
+            "metrics": {"acc": self.acc, "loss": self.loss,
+                        "edge_power": self.edge_power,
+                        "is_power": self.is_power},
+            "final": fin,
+            "n_traces": self.n_traces,
+            "seconds": self.seconds,
+        }
+
+
+class SweepRunner:
+    """Run a list of scenarios over a shared seed batch.
+
+    scenarios: Scenario objects or registry names.
+    seeds: int S (-> seeds 0..S-1) or explicit list.
+    quick: substitute each scenario's CI-sized `.quick()` variant.
+    batch: how the seed axis is executed — both are ONE trace/compile:
+      - "vmap": seeds run data-parallel (SIMD over the seed axis);
+        fastest, but batched-dot lowering differs from the unbatched
+        round, so per-seed results can drift from a standalone run by
+        float-rounding ULPs.
+      - "map": seeds run through `jax.lax.map`, whose scan body is the
+        *identical* per-slice computation for every batch size — a
+        sweep slice is bitwise equal to the same seed swept alone
+        (adding seeds never perturbs existing trajectories).
+    """
+
+    def __init__(self, scenarios: Sequence[Union[str, Scenario]],
+                 seeds: Union[int, Sequence[int]] = 1,
+                 quick: bool = False, keep_state: bool = False,
+                 batch: str = "vmap"):
+        self.scenarios = [get_scenario(s) if isinstance(s, str) else s
+                          for s in scenarios]
+        if quick:
+            self.scenarios = [s.quick() for s in self.scenarios]
+        self.seeds = (list(range(seeds)) if isinstance(seeds, int)
+                      else list(seeds))
+        self.quick = quick
+        self.keep_state = keep_state
+        if batch not in ("vmap", "map"):
+            raise ValueError(f"batch must be 'vmap' or 'map', got {batch!r}")
+        self.batch = batch
+
+    # -- one scenario, all seeds at once ------------------------------------
+
+    def run_scenario(self, sc: Scenario) -> SweepResult:
+        t0 = time.time()
+        init_fn, apply_fn, loss_fn = sc.task_fns()
+        X, Y, xte, yte = sc.make_data()
+        topo = sc.make_topology()
+        cfg = sc.whfl_config()
+        opt = adam(sc.lr) if sc.opt == "adam" else sgd(sc.lr)
+
+        # Stacked per-seed state: identical-by-construction to S
+        # independent `init_state` calls.
+        params = [split_params(init_fn(jax.random.PRNGKey(s)))[0]
+                  for s in self.seeds]
+        spec = agg.make_flat_spec(params[0])
+        counter = [0]
+        round_fn = make_round_fn(loss_fn, opt, topo, cfg, spec, X, Y,
+                                 trace_counter=counter)
+        states = [init_round_state(p, opt, topo.C, topo.M) for p in params]
+        state = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        keys = jnp.stack([jax.random.PRNGKey(s + 1) for s in self.seeds])
+
+        if self.batch == "vmap":
+            round_b = jax.jit(jax.vmap(round_fn,
+                                       in_axes=(0, 0, None, None)))
+        else:
+            round_b = jax.jit(lambda st, ks, P, P_is: jax.lax.map(
+                lambda a: round_fn(a[0], a[1], P, P_is), (st, ks)))
+        split_b = jax.jit(jax.vmap(jax.random.split))
+
+        xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
+
+        def _eval(theta):
+            logits = apply_fn(theta, xte_j)
+            acc = jnp.mean((jnp.argmax(logits, -1) == yte_j)
+                           .astype(jnp.float32))
+            onehot = jax.nn.one_hot(yte_j, logits.shape[-1])
+            loss = -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot,
+                                     -1))
+            return acc, loss
+
+        if self.batch == "vmap":
+            eval_b = jax.jit(jax.vmap(_eval))
+        else:  # same per-slice program for every batch size (bitwise)
+            eval_b = jax.jit(lambda th: jax.lax.map(_eval, th))
+
+        S, T = len(self.seeds), sc.rounds
+        rounds: List[int] = []
+        acc_t = [[] for _ in range(S)]
+        loss_t = [[] for _ in range(S)]
+        pe_t = [[] for _ in range(S)]
+        pi_t = [[] for _ in range(S)]
+
+        for t in range(T):
+            P_t, P_is_t = power_schedule(
+                t, cfg.power_base, cfg.power_slope, cfg.power_is_factor,
+                cfg.power_low)
+            ks = split_b(keys)
+            keys, subs = ks[:, 0], ks[:, 1]
+            state = round_b(state, subs, P_t, P_is_t)
+            if t % sc.eval_every == 0 or t == T - 1:
+                accs, losses = eval_b(state["theta"])
+                accs, losses = np.asarray(accs), np.asarray(losses)
+                pe = np.asarray(state["power_edge"]
+                                / jnp.maximum(state["n_edge_tx"], 1.0))
+                pi = np.asarray(state["power_is"]
+                                / jnp.maximum(state["n_is_tx"], 1.0))
+                rounds.append(t + 1)
+                for s in range(S):
+                    acc_t[s].append(float(accs[s]))
+                    loss_t[s].append(float(losses[s]))
+                    pe_t[s].append(float(pe[s]))
+                    pi_t[s].append(float(pi[s]))
+
+        return SweepResult(
+            scenario=sc, seeds=self.seeds, rounds=rounds, acc=acc_t,
+            loss=loss_t, edge_power=pe_t, is_power=pi_t,
+            n_traces=counter[0], seconds=time.time() - t0,
+            final_state=state if self.keep_state else None)
+
+    # -- the sweep -----------------------------------------------------------
+
+    def run(self) -> List[SweepResult]:
+        return [self.run_scenario(sc) for sc in self.scenarios]
+
+
+def sweep_to_json(results: Sequence[SweepResult],
+                  quick: bool = False) -> Dict:
+    return {
+        "schema": SCHEMA_VERSION,
+        "quick": quick,
+        "scenarios": [r.to_record() for r in results],
+    }
+
+
+def csv_lines(doc: Dict, prefix: str = "sweep") -> List[str]:
+    """Benchmark-suite CSV convention: name,us_per_call,derived."""
+    lines = []
+    for rec in doc["scenarios"]:
+        name = rec["scenario"]["name"]
+        n_rounds = max(rec["rounds"][-1] if rec["rounds"] else 1, 1)
+        us = 1e6 * rec["seconds"] / n_rounds
+        fin = rec["final"]
+        lines.append(
+            f"{prefix}/{name},{us:.1f},"
+            f"final_acc={fin['acc_mean']:.3f}"
+            f"±{fin['acc_std']:.3f};edge_power={fin['edge_power']:.2e};"
+            f"seeds={len(rec['seeds'])};traces={rec['n_traces']}")
+    return lines
+
+
+def main(argv: Optional[Sequence[str]] = None) -> Dict:
+    ap = argparse.ArgumentParser(
+        description="Batched multi-seed scenario sweep")
+    ap.add_argument("--scenarios", default="fig2_iid",
+                    help="comma-separated registry names (--list to see)")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="number of seeds (0..S-1), vmapped per scenario")
+    ap.add_argument("--seed-list", default=None,
+                    help="explicit comma-separated seeds (overrides --seeds)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized scenario variants (seconds, not hours)")
+    ap.add_argument("--batch", default="vmap", choices=["vmap", "map"],
+                    help="seed-axis execution: vmap (fastest) or map "
+                         "(bitwise-reproducible per seed)")
+    ap.add_argument("--out", default=None, help="write JSON document here")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered scenarios and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name, sc in sorted(list_scenarios().items()):
+            print(f"{name:28s} {sc.dataset}/{sc.partition} "
+                  f"tau={sc.tau} I={sc.I} mode={sc.mode}/{sc.ota_mode}")
+        return {}
+
+    seeds = ([int(s) for s in args.seed_list.split(",")]
+             if args.seed_list else args.seeds)
+    try:
+        runner = SweepRunner(args.scenarios.split(","), seeds=seeds,
+                             quick=args.quick, batch=args.batch)
+    except KeyError as e:
+        ap.error(str(e.args[0] if e.args else e))
+    doc = sweep_to_json(runner.run(), quick=args.quick)
+    for line in csv_lines(doc):
+        print(line)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=1)
+        print("wrote", args.out)
+    return doc
+
+
+if __name__ == "__main__":
+    main()

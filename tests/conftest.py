@@ -1,0 +1,21 @@
+"""Shared pytest configuration.
+
+Marker conventions (declared in pytest.ini):
+- `slow`: long convergence / Monte-Carlo statistics tests.  The default
+  run (and CI) excludes them via `addopts = -m "not slow"`; run the
+  full suite with `-m ""` or just the slow tier with `-m slow`.
+- `tpu`: needs a real TPU backend (compiled Pallas kernels).  Tests so
+  marked are auto-skipped here when the default jax backend is not TPU.
+"""
+import jax
+import pytest
+
+
+def pytest_collection_modifyitems(config, items):
+    if jax.default_backend() != "tpu":
+        skip_tpu = pytest.mark.skip(
+            reason="requires a TPU backend (jax default_backend="
+                   f"{jax.default_backend()!r})")
+        for item in items:
+            if "tpu" in item.keywords:
+                item.add_marker(skip_tpu)

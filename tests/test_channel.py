@@ -28,7 +28,8 @@ def test_pack_roundtrip():
 def test_ideal_cluster_is_exact_mean():
     est = cluster_ota(jax.random.PRNGKey(0), jnp.asarray(DELTAS), TOPO, 1.0,
                       OTAConfig(mode="ideal"))
-    np.testing.assert_allclose(est, DELTAS.mean(1), rtol=1e-6)
+    # atol covers f32 accumulation-order differences vs numpy's mean
+    np.testing.assert_allclose(est, DELTAS.mean(1), rtol=1e-6, atol=1e-6)
 
 
 def test_ideal_global_is_exact_mean():
@@ -38,7 +39,9 @@ def test_ideal_global_is_exact_mean():
     np.testing.assert_allclose(est, isd.mean(0), rtol=1e-6)
 
 
-@pytest.mark.parametrize("mode", ["faithful", "equivalent"])
+@pytest.mark.parametrize(
+    "mode", [pytest.param("faithful", marks=pytest.mark.slow),
+             "equivalent"])
 def test_cluster_unbiased(mode):
     ests = _mc(lambda k: cluster_ota(k, jnp.asarray(DELTAS), TOPO, 1.0,
                                      OTAConfig(mode=mode)))
@@ -55,6 +58,7 @@ def test_global_unbiased(mode):
     assert bias.mean() < 4.0 * float(ests.std(0).mean()) / np.sqrt(400)
 
 
+@pytest.mark.slow
 def test_equivalent_matches_faithful_variance():
     """The closed-form surrogate must match the simulated channel's
     second moment (the whole point of the production mode)."""
@@ -71,6 +75,7 @@ def test_equivalent_matches_faithful_variance():
             hop.__name__, float(s_f), float(s_e))
 
 
+@pytest.mark.slow
 def test_kernel_path_matches_scan_path_statistics():
     cfgk = OTAConfig(mode="faithful", use_kernel=True)
     cfgs = OTAConfig(mode="faithful", use_kernel=False)
@@ -96,6 +101,7 @@ def test_more_antennas_less_noise():
     assert float(s_big) < 0.5 * float(s_small)
 
 
+@pytest.mark.slow
 def test_interference_increases_variance():
     d = jnp.asarray(DELTAS)
     s_on = _mc(lambda k: cluster_ota(k, d, TOPO, 1.0,

@@ -9,9 +9,19 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import pytest
 
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Partial-auto shard_map (manual cluster/user axes + an auto model axis)
+# needs the jax>=0.6 `jax.shard_map(axis_names=...)` API; on older jax
+# the SPMD partitioner lowers `axis_index` to a PartitionId instruction
+# XLA:CPU cannot partition.  Fully-manual aggregation tests still run.
+requires_partial_auto = pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="partial-auto shard_map needs jax>=0.6 "
+           "(XLA:CPU PartitionId limitation)")
 
 
 def _run(script: str, n_dev: int = 8) -> str:
@@ -43,9 +53,10 @@ def test_ideal_aggregation_is_exact_mean():
                              1.0, 20.0, cfg)
         return est["w"]
 
-    g = jax.shard_map(f, mesh=rmesh,
-                      in_specs=P(("pod", "cluster", "user")), out_specs=P(),
-                      axis_names={"pod", "cluster", "user"}, check_vma=False)
+    from repro.sharding import shard_map
+    g = shard_map(f, mesh=rmesh,
+                  in_specs=P(("pod", "cluster", "user")), out_specs=P(),
+                  axis_names={"pod", "cluster", "user"}, check_vma=False)
     x = jnp.arange(4 * 6, dtype=jnp.float32).reshape(4, 6)
     out = jax.jit(g)(x)
     np.testing.assert_allclose(np.asarray(out)[0], x.mean(0), rtol=1e-6)
@@ -59,6 +70,7 @@ def test_equivalent_aggregation_unbiased_and_fused_matches():
     from jax.sharding import PartitionSpec as P
     from repro.core.dist import OTADistConfig, whfl_aggregate, uniform_geom
     from repro.launch.mesh import refine_mesh
+    from repro.sharding import shard_map
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     rmesh = refine_mesh(mesh, users_per_cluster=2)
@@ -68,10 +80,12 @@ def test_equivalent_aggregation_unbiased_and_fused_matches():
         def f(x, key):
             est = whfl_aggregate({"w": x}, geom, key, 1.0, 20.0, cfg)
             return est["w"]
-        return jax.jit(jax.shard_map(
+        # fully manual (model axis too): the body never touches the
+        # model axis, and partial-auto cannot lower on older jax/XLA:CPU
+        return jax.jit(shard_map(
             f, mesh=rmesh,
             in_specs=(P(("pod", "cluster", "user")), P()), out_specs=P(),
-            axis_names={"pod", "cluster", "user"}, check_vma=False))
+            check_vma=False))
 
     x = jax.random.normal(jax.random.PRNGKey(3), (4, 64))
     tgt = np.asarray(x.mean(0))
@@ -93,6 +107,7 @@ def test_equivalent_aggregation_unbiased_and_fused_matches():
     """)
 
 
+@requires_partial_auto
 def test_train_step_runs_and_learns():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
@@ -135,6 +150,7 @@ def test_train_step_runs_and_learns():
     """)
 
 
+@requires_partial_auto
 def test_local_sgd_tau_I_path():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
@@ -196,6 +212,7 @@ def test_local_sgd_tau_I_path():
     """)
 
 
+@pytest.mark.slow
 def test_fused_fsdp_train_step():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
@@ -247,6 +264,7 @@ def test_hierarchy_reduces_pod_crossing_traffic():
     from repro.core.dist import OTADistConfig, whfl_aggregate, uniform_geom
     from repro.launch.mesh import refine_mesh
     from repro.launch.hlo import collective_stats
+    from repro.sharding import shard_map
 
     mesh = jax.make_mesh((2, 4, 2), ("pod", "data", "model"))
     rmesh = refine_mesh(mesh, users_per_cluster=2)
@@ -256,10 +274,10 @@ def test_hierarchy_reduces_pod_crossing_traffic():
     def f(x, key):
         return whfl_aggregate({"w": x}, geom, key, 1.0, 20.0, cfg)["w"]
 
-    g = jax.jit(jax.shard_map(
+    g = jax.jit(shard_map(
         f, mesh=rmesh,
         in_specs=(P(("pod", "cluster", "user")), P()), out_specs=P(),
-        axis_names={"pod", "cluster", "user"}, check_vma=False))
+        check_vma=False))
     x = jax.ShapeDtypeStruct((8, 1024), jnp.float32)
     k = jax.ShapeDtypeStruct((2,), jnp.uint32)
     txt = g.lower(x, k).compile().as_text()

@@ -1,0 +1,161 @@
+"""Scenario-sweep engine tests (repro.sim).
+
+Pins the three contract properties of the batched engine:
+1. one jit compilation of the round function per scenario covers the
+   whole seed batch (S=4),
+2. per-seed trajectories equal sequential single-seed runs — bitwise
+   in "map" batch mode (identical per-slice program for every batch
+   size), and to float-rounding tolerance for the "vmap" data-parallel
+   mode vs. a standalone `WHFLTrainer` loop,
+3. the JSON output schema is stable.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import OTAConfig, cluster_ota, uniform_topology, vmap_seeds
+from repro.core.whfl import WHFLTrainer, accuracy
+from repro.nn.core import split_params
+from repro.optim import adam, sgd
+from repro.sim import (SCHEMA_VERSION, Scenario, SweepRunner, get_scenario,
+                       list_scenarios, sweep_to_json)
+from repro.sim.sweep import METRIC_KEYS, RECORD_KEYS, csv_lines
+
+SEEDS = [0, 1, 2, 3]
+
+
+def _tiny_fig2(**kw):
+    """CI-sized fig2 MNIST scenario (the acceptance-criteria scenario)."""
+    sc = get_scenario("fig2_iid").quick().replace(total_IT=5, eval_every=1)
+    return sc.replace(**kw) if kw else sc
+
+
+# ---------------------------------------------------------------------------
+# 1+2: batched-vs-sequential equivalence, single compilation
+# ---------------------------------------------------------------------------
+
+def test_map_mode_bitwise_matches_single_seed_runs_one_compile():
+    """S=4 'map' sweep == 4 separate single-seed sweeps, bitwise, with
+    exactly one trace of the round function."""
+    sc = _tiny_fig2()
+    res = SweepRunner([sc], seeds=SEEDS, batch="map",
+                      keep_state=True).run_scenario(sc)
+    assert res.n_traces == 1, res.n_traces
+
+    for i, s in enumerate(SEEDS):
+        solo = SweepRunner([sc], seeds=[s], batch="map",
+                           keep_state=True).run_scenario(sc)
+        # recorded trajectories are identical floats
+        assert solo.acc[0] == res.acc[i]
+        assert solo.loss[0] == res.loss[i]
+        assert solo.edge_power[0] == res.edge_power[i]
+        assert solo.is_power[0] == res.is_power[i]
+        # and the full end state (params + optimizer moments) is bitwise
+        eq = jax.tree.map(lambda a, b: bool(jnp.all(a[0] == b[i])),
+                          solo.final_state, res.final_state)
+        assert jax.tree.all(eq), eq
+
+
+def test_vmap_mode_matches_sequential_trainer():
+    """The data-parallel 'vmap' mode reproduces a hand-rolled sequential
+    `WHFLTrainer` loop per seed (same keys, same schedule) up to float
+    rounding, with one compilation for all S seeds."""
+    sc = _tiny_fig2()
+    res = SweepRunner([sc], seeds=SEEDS, batch="vmap",
+                      keep_state=True).run_scenario(sc)
+    assert res.n_traces == 1, res.n_traces
+
+    init_fn, apply_fn, loss_fn = sc.task_fns()
+    X, Y, xte, yte = sc.make_data()
+    topo = sc.make_topology()
+    cfg = sc.whfl_config()
+
+    for i, s in enumerate(SEEDS):
+        opt = adam(sc.lr) if sc.opt == "adam" else sgd(sc.lr)
+        trainer = WHFLTrainer(loss_fn, opt, topo, cfg, X, Y)
+        params, _ = split_params(init_fn(jax.random.PRNGKey(s)))
+        state = trainer.init_state(params)
+        key = jax.random.PRNGKey(s + 1)
+        accs = []
+        for _ in range(sc.rounds):
+            key, sub = jax.random.split(key)
+            state = trainer.round(state, sub)
+            accs.append(accuracy(apply_fn, state["theta"],
+                                 jnp.asarray(xte), jnp.asarray(yte)))
+        np.testing.assert_allclose(accs, res.acc[i], atol=0.01)
+        np.testing.assert_allclose(
+            float(state["power_edge"] / jnp.maximum(state["n_edge_tx"], 1)),
+            res.edge_power[i][-1], rtol=1e-5)
+        th = jax.tree.map(lambda x: x[i], res.final_state["theta"])
+        for a, b in zip(jax.tree.leaves(state["theta"]),
+                        jax.tree.leaves(th)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-5)
+
+
+def test_channel_seed_batching_matches_individual_draws():
+    """`vmap_seeds` draws per-seed channel realizations equal to
+    independent per-key calls."""
+    topo = uniform_topology(C=2, M=3, K=8, K_ps=8, sigma_z2=1.0)
+    deltas = jax.random.normal(jax.random.PRNGKey(7), (4, 2, 3, 64))
+    keys = jax.random.split(jax.random.PRNGKey(8), 4)
+    cfg = OTAConfig(mode="equivalent")
+    batched = vmap_seeds(cluster_ota)(keys, deltas, topo, 1.0, cfg)
+    for s in range(4):
+        one = cluster_ota(keys[s], deltas[s], topo, 1.0, cfg)
+        np.testing.assert_allclose(np.asarray(batched[s]), np.asarray(one),
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# 3: output schema stability
+# ---------------------------------------------------------------------------
+
+def test_sweep_json_schema_is_stable():
+    sc_a = _tiny_fig2()
+    sc_b = get_scenario("fig2_iid_conventional").quick().replace(
+        total_IT=3, eval_every=1)
+    runner = SweepRunner([sc_a, sc_b], seeds=2)
+    doc = sweep_to_json(runner.run())
+
+    assert doc["schema"] == SCHEMA_VERSION
+    assert len(doc["scenarios"]) == 2
+    for rec in doc["scenarios"]:
+        assert tuple(sorted(rec)) == tuple(sorted(RECORD_KEYS))
+        assert tuple(sorted(rec["metrics"])) == tuple(sorted(METRIC_KEYS))
+        assert rec["seeds"] == [0, 1]
+        n_evals = len(rec["rounds"])
+        for m in METRIC_KEYS:
+            assert len(rec["metrics"][m]) == 2            # per seed
+            assert all(len(t) == n_evals for t in rec["metrics"][m])
+        # scenario spec round-trips through the registry dataclass
+        assert Scenario(**rec["scenario"]).name == rec["scenario"]["name"]
+    # document is valid JSON end-to-end
+    doc2 = json.loads(json.dumps(doc))
+    assert doc2["schema"] == SCHEMA_VERSION
+    # CSV rendering (benchmark convention) has one line per scenario
+    lines = csv_lines(doc)
+    assert len(lines) == 2 and all(l.count(",") == 2 for l in lines)
+
+
+def test_registry_has_paper_scenarios():
+    names = set(list_scenarios())
+    for expected in ("fig2_iid", "fig2_noniid", "fig2_cluster_noniid",
+                     "fig2_iid_I2", "fig2_iid_I4", "fig2_iid_conventional",
+                     "fig2_iid_ideal", "fig3_cifar", "fig3_cifar_I2",
+                     "fig3_cifar_conventional"):
+        assert expected in names, expected
+    with pytest.raises(KeyError):
+        get_scenario("nope")
+
+
+def test_conventional_scenario_has_no_is_hop():
+    sc = get_scenario("fig2_iid_conventional").quick().replace(
+        total_IT=2, eval_every=1)
+    res = SweepRunner([sc], seeds=1, keep_state=True).run_scenario(sc)
+    assert float(res.final_state["n_is_tx"][0]) == 0.0
+    assert res.is_power[0][-1] == 0.0
+    assert res.edge_power[0][-1] > 0.0

@@ -27,7 +27,7 @@ def _loss(params, x, y, rng):
     return -jnp.mean(jnp.sum(jax.nn.log_softmax(logits) * onehot, -1))
 
 
-def _train(data, cfg, topo=None, rounds=15):
+def _train(data, cfg, topo=None, rounds=25):
     X, Y, xte, yte = data
     topo = topo or uniform_topology(C=C, M=M, K=64, K_ps=64, sigma_z2=1.0)
     trainer = WHFLTrainer(_loss, sgd(0.1), topo, cfg, X, Y)
@@ -52,6 +52,7 @@ def test_whfl_learns(data, mode):
     assert trainer.avg_edge_power(state) > 0
 
 
+@pytest.mark.slow
 def test_whfl_faithful_short(data):
     cfg = WHFLConfig(tau=1, I=1, batch=128,
                      ota=OTAConfig(mode="faithful"))
@@ -77,6 +78,7 @@ def test_conventional_fl_baseline(data):
     assert float(state["n_is_tx"]) == 0  # no IS hop in conventional FL
 
 
+@pytest.mark.slow
 def test_whfl_beats_conventional_over_the_air(data):
     """The paper's central experimental claim (Fig. 2a): under the same
     noisy channel, W-HFL's short MU->IS links beat conventional OTA FL's
