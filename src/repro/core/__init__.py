@@ -1,8 +1,10 @@
 # The paper's primary contribution: W-HFL — hierarchical over-the-air
 # federated learning (OTA aggregation at both the cluster and global hop).
 from repro.core.topology import Topology, random_topology, uniform_topology
-from repro.core.channel import (OTAConfig, cluster_ota, global_ota,
-                                conventional_ota, vmap_seeds)
+from repro.core.channel import (ChannelBackend, OTAConfig, cluster_ota,
+                                conventional_ota, get_backend, global_ota,
+                                list_backends, register_backend,
+                                resolve_backend, vmap_seeds)
 from repro.core import aggregation, bound, whfl
 
 __all__ = [
@@ -10,6 +12,11 @@ __all__ = [
     "random_topology",
     "uniform_topology",
     "OTAConfig",
+    "ChannelBackend",
+    "register_backend",
+    "get_backend",
+    "list_backends",
+    "resolve_backend",
     "cluster_ota",
     "global_ota",
     "conventional_ota",

@@ -5,20 +5,35 @@ uncoded and simultaneously over a Rayleigh-fading MAC with path loss,
 received over K antennas, matched-filter combined with the *sum* of the
 own-cluster channels (eq. 9/16), and rescaled (eq. 12/17).
 
-Two modes:
-- "faithful": materializes per-(user, antenna, symbol) channels and
-  folds over antennas — the paper's model, exactly (including intra- and
-  inter-cluster interference, eqs. 8/11 and 15/19).
-- "equivalent": the beyond-paper production mode — applies the
-  closed-form first/second moments of eq. (11)/(19) (signal-gain jitter
-  ~ Var[(1/K)Σ_k|h|^2], interference and thermal-noise variances from
-  the Lemma 7–14 calculus) as per-entry Gaussian perturbations.  ~K x
-  cheaper; distributionally matched to second order.
+The receive fold is implemented by pluggable **channel backends**
+(`ChannelBackend` registry); `OTAConfig.backend` selects one:
+
+- ``reference`` — einsum scan over antenna chunks; materializes
+  per-(user, antenna, symbol) channels chunk by chunk.  The paper's
+  model, exactly (including intra- and inter-cluster interference,
+  eqs. 8/11 and 15/19).  The ground truth the others are gated on.
+- ``equivalent`` — the beyond-paper production surrogate: applies the
+  closed-form first/second moments of eq. (11)/(19) as per-entry
+  Gaussian perturbations.  ~K x cheaper; matched to second order.
+- ``slab_kernel`` — faithful Pallas path: materializes the full
+  [U, K, N] channel slab and runs the blocked matched-filter combine
+  (`repro.kernels.ota_combine`), all rx stations in one dispatch.
+  O(U*K*N) memory.
+- ``fused`` — faithful Pallas path for large U: fading and noise are
+  derived *inside* the kernel from a counter PRNG
+  (`repro.kernels.fused_mac`); no channel tensor ever exists, memory
+  is O(block).  Same distribution as ``reference``/``slab_kernel``,
+  different draws (counter-based instead of jax.random).
+
+`OTAConfig.mode` keeps the paper-level fidelity switch ("faithful" |
+"equivalent" | "ideal"); with ``backend=""`` the mode picks its default
+implementation ("faithful" -> ``reference``).  ``mode="ideal"``
+bypasses the channel entirely and wins over any backend setting.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,8 +46,25 @@ from repro.core.topology import Topology
 class OTAConfig:
     mode: str = "faithful"   # "faithful" | "equivalent" | "ideal"
     interference: bool = True
-    antenna_chunk: int = 8   # antennas folded per scan step (faithful mode)
-    use_kernel: bool = False  # use the Pallas ota_combine kernel
+    antenna_chunk: int = 8   # antennas folded per scan step (reference)
+    backend: str = ""        # "" (mode default) | "reference" |
+    #                          "equivalent" | "slab_kernel" | "fused"
+
+
+_MODE_DEFAULT_BACKEND = {"faithful": "reference", "equivalent": "equivalent"}
+
+
+def resolve_backend(cfg: OTAConfig) -> str:
+    """Backend name a non-ideal hop will dispatch to: the explicit
+    `cfg.backend` if set, else the default for `cfg.mode`."""
+    if cfg.backend:
+        return cfg.backend
+    try:
+        return _MODE_DEFAULT_BACKEND[cfg.mode]
+    except KeyError:
+        raise ValueError(
+            f"no default backend for mode {cfg.mode!r}; known modes: "
+            f"{', '.join(sorted(_MODE_DEFAULT_BACKEND))}, ideal") from None
 
 
 def vmap_seeds(hop_fn):
@@ -85,85 +117,37 @@ def _cn(key, shape, var: float) -> jax.Array:
                            s * jax.random.normal(ki, shape, jnp.float32))
 
 
-# ---------------------------------------------------------------------------
-# Cluster aggregation hop (MUs -> ISs), eq. (8)-(12)
-# ---------------------------------------------------------------------------
+def _seed_words(key) -> jax.Array:
+    """PRNG key (old-style uint32 [2] or typed) -> uint32 [2] seed words
+    for the counter-based fused kernel."""
+    key = jnp.asarray(key)
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    return key.astype(jnp.uint32).reshape(-1)[:2]
 
-def cluster_ota(key, deltas: jax.Array, topo: Topology, P_t,
-                cfg: OTAConfig = OTAConfig()) -> jax.Array:
-    """deltas: [C, M, 2N] (model differences of every MU).
-    Returns Delta_hat_IS: [C, 2N] — each IS's estimate of its cluster mean.
+
+def _cluster_geometry(topo: Topology,
+                      cfg: OTAConfig) -> Tuple[jax.Array, jax.Array,
+                                               jax.Array]:
+    """Static cluster-hop geometry for the kernel backends.
+
+    Returns (amp [C_rx, U], own [C_rx, U], beta_bar [C]): per-rx channel
+    amplitudes sqrt(beta[u -> c]), the own-cluster matched-filter mask,
+    and the normalization sums.  ``interference=False`` zeroes the
+    cross-cluster amplitudes (same effect as masking beta in the
+    reference scan).
     """
-    if cfg.mode == "ideal":
-        return deltas.mean(axis=1)
-    if cfg.mode == "equivalent":
-        return _cluster_equivalent(key, deltas, topo, P_t, cfg)
-    return _cluster_faithful(key, deltas, topo, P_t, cfg)
-
-
-def _cluster_faithful(key, deltas, topo: Topology, P_t, cfg: OTAConfig):
-    C, M, twoN = deltas.shape
-    N = twoN // 2
-    tx = pack_cx(deltas)  # [C, M, N]
-    beta = jnp.asarray(topo.beta_mu_is, jnp.float32)      # [C', M, C_rx]
-    if not cfg.interference:
-        # zero out cross-cluster path gains
-        eye = jnp.eye(C, dtype=jnp.float32)[:, None, :]
-        beta = beta * eye
-    beta_bar_c = jnp.asarray(topo.beta_bar_c, jnp.float32)  # [C]
-    K = topo.K
-    if cfg.use_kernel:
-        return _cluster_faithful_kernel(key, tx, beta, beta_bar_c, topo, P_t)
-    ck = _chunk(K, cfg.antenna_chunk)
-    n_steps = K // ck
-    keys = jax.random.split(key, n_steps)
-
-    def fold(acc, args):
-        kk, = args
-        k1, k2 = jax.random.split(kk)
-        # h[c', m, c_rx, a, n] = sqrt(beta) g, g ~ CN(0, sigma_h2)
-        g = _cn(k1, (C, M, C, ck, N), topo.sigma_h2)
-        h = jnp.sqrt(beta)[:, :, :, None, None] * g
-        z = _cn(k2, (C, ck, N), topo.sigma_z2)
-        # received per rx cluster/antenna (eq. 8)
-        y = P_t * jnp.einsum("umcan,umn->can", h, tx) + z
-        # own-cluster matched filter: sum_m h_{c,m,c,a,n} (eq. 9)
-        mf = _own(h)
-        acc = acc + jnp.einsum("can,can->cn", jnp.conj(mf), y)
-        return acc, None
-
-    acc0 = jnp.zeros((C, N), jnp.complex64)
-    acc, _ = jax.lax.scan(fold, acc0, (keys,))
-    # eq. (12) rescale.  NOTE (normalization): the paper's literal
-    # 1/(P_t M sigma_h^2 beta_bar_c) with beta_bar_c = SUM_m beta damps the
-    # estimate by 1/M and contradicts the unbiasedness step in its own
-    # Lemma 6 proof; the consistent reading is beta_bar_c = M * (average
-    # beta), i.e. divide by P_t sigma_h^2 SUM_m beta.  Then
-    # E[est] = sum_m (beta_m/beta_bar_c) Delta_m — the beta-weighted
-    # cluster mean, = the eq. (4) ideal mean for symmetric clusters.
-    scale = 1.0 / (P_t * topo.sigma_h2 * beta_bar_c)
-    est = acc / K * scale[:, None]
-    return unpack_cx(est)
-
-
-def _cluster_faithful_kernel(key, tx, beta, beta_bar_c, topo: Topology, P_t):
-    """Pallas-kernel path: per receiving IS, materialize the [U, K, N]
-    channel slab and run the blocked matched-filter combine."""
-    from repro.kernels import mf_combine
-
-    C, M, N = tx.shape
-    U, K = C * M, topo.K
-    tx_flat = (P_t * tx).reshape(U, N)
-    keys = jax.random.split(key, 2 * C)
-    outs = []
+    C, M = topo.C, topo.M
+    U = C * M
+    beta = np.asarray(topo.beta_mu_is, np.float32).reshape(U, C)
+    own = np.zeros((C, U), np.float32)
     for c in range(C):
-        g = _cn(keys[2 * c], (U, K, N), topo.sigma_h2)
-        h = jnp.sqrt(beta[:, :, c].reshape(U))[:, None, None] * g
-        z = _cn(keys[2 * c + 1], (K, N), topo.sigma_z2)
-        w = jnp.zeros((C, M), jnp.float32).at[c].set(1.0).reshape(U)
-        y = mf_combine(h, tx_flat, z, w)
-        outs.append(y / K / (P_t * topo.sigma_h2 * beta_bar_c[c]))
-    return unpack_cx(jnp.stack(outs))
+        own[c, c * M:(c + 1) * M] = 1.0
+    amp = np.sqrt(beta.T)                        # [C_rx, U]
+    if not cfg.interference:
+        amp = amp * own
+    bb = np.asarray(topo.beta_bar_c, np.float32)
+    return jnp.asarray(amp), jnp.asarray(own), jnp.asarray(bb)
 
 
 def _own(h):
@@ -174,66 +158,338 @@ def _own(h):
     return own.sum(axis=1)
 
 
-def _cluster_equivalent(key, deltas, topo: Topology, P_t, cfg: OTAConfig):
-    """Second-order-matched surrogate for `_cluster_faithful`.
+# ---------------------------------------------------------------------------
+# backend protocol + registry
+# ---------------------------------------------------------------------------
 
-    est[c] = (1/(M beta_bar_c)) sum_m beta_m (1 + eps_{m,n}) D_{c,m}
-             + CN(0, V_intra + V_inter + V_noise) per complex entry,
-    with eps ~ N(0, 1/K) (concentration of (1/K)sum_k |h|^2) and
-    variances from the Lemma 7/9 calculus.
+class ChannelBackend:
+    """One implementation of the paper's two OTA receive folds.
+
+    `cluster` is the MU -> IS hop (eq. 8-12): per-cluster estimates for
+    every receiving IS.  `mac` is the single-cell hop (eq. 15-17) used
+    both for IS -> PS (U = C) and conventional single-hop FL (U = C*M).
+    Backends must be pure: all randomness follows `key`.
     """
-    C, M, twoN = deltas.shape
-    N = twoN // 2
-    K = float(topo.K)
-    tx = pack_cx(deltas)  # [C, M, N]
-    beta = jnp.asarray(topo.beta_mu_is, jnp.float32)        # [C', M, C_rx]
-    beta_own = jnp.stack([beta[c, :, c] for c in range(C)])  # [C, M]
-    bb = jnp.asarray(topo.beta_bar_c, jnp.float32)           # [C]
 
-    k_eps, k_int, k_no = jax.random.split(key, 3)
-    eps = jax.random.normal(k_eps, (C, M, N), jnp.float32) / np.sqrt(K)
-    sig = jnp.einsum("cm,cmn->cn", beta_own.astype(jnp.complex64),
-                     tx * (1.0 + eps))
-    sig = sig / bb[:, None]          # unbiased normalization (see faithful)
+    name: str = ""
 
-    p2 = jnp.abs(tx) ** 2                                    # [C, M, N]
-    if cfg.interference:
-        # intra: sum_m beta_m * sum_{m'!=m} beta_m' |D_m'|^2
-        b_sum = beta_own.sum(axis=1)                         # == bb
-        w_intra = jnp.einsum("cm,cmn->cn", beta_own,
-                             p2 * (b_sum[:, None, None] - beta_own[..., None])
-                             / 1.0)
-        # w_intra[c,n] = sum_m' beta_m' |D_m'|^2 (bb_c - beta_m')  — matches
-        # sum_m beta_m sum_{m'!=m} beta_m' |D_m'|^2 after swapping sums.
-        V_intra = w_intra / (K * bb[:, None] ** 2)
-        # inter: sum_m beta_{c,m,c} * sum_{c'!=c,m'} beta_{c',m',c} |D_{c',m'}|^2
-        cross = jnp.einsum("umc,umn->cn", beta, p2) - jnp.einsum(
-            "cm,cmn->cn", beta_own, p2)
-        V_inter = bb[:, None] * cross / (K * bb[:, None] ** 2)
-    else:
-        V_intra = V_inter = jnp.zeros((C, N), jnp.float32)
-    V_noise = topo.sigma_z2 / (
-        (P_t ** 2) * topo.sigma_h2 * bb[:, None] * K)
-    noise = _cn(k_no, (C, N), 1.0) * jnp.sqrt(V_intra + V_inter + V_noise)
-    return unpack_cx(sig + noise)
+    def cluster(self, key, deltas: jax.Array, topo: Topology, P_t,
+                cfg: OTAConfig) -> jax.Array:
+        """deltas [C, M, 2N] -> per-IS estimates [C, 2N]."""
+        raise NotImplementedError
+
+    def mac(self, key, deltas: jax.Array, beta: np.ndarray, K: int,
+            sigma_h2: float, sigma_z2: float, P,
+            cfg: OTAConfig) -> jax.Array:
+        """deltas [U, 2N], beta [U] -> eq.(17)-rescaled estimate [2N]."""
+        raise NotImplementedError
+
+
+BACKENDS: Dict[str, ChannelBackend] = {}
+
+
+def register_backend(backend: ChannelBackend,
+                     overwrite: bool = False) -> ChannelBackend:
+    if backend.name in BACKENDS and not overwrite:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    BACKENDS[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> ChannelBackend:
+    try:
+        return BACKENDS[name]
+    except KeyError:
+        raise KeyError(f"unknown channel backend {name!r}; known: "
+                       f"{', '.join(sorted(BACKENDS))}") from None
+
+
+def list_backends() -> Dict[str, ChannelBackend]:
+    return dict(BACKENDS)
 
 
 # ---------------------------------------------------------------------------
-# Global aggregation hop (ISs -> PS), eq. (15)-(19)
+# "reference": einsum scan over antenna chunks (the ground truth)
 # ---------------------------------------------------------------------------
+
+class ReferenceBackend(ChannelBackend):
+    """The paper's model folded chunk-by-chunk over antennas with
+    jnp einsums — exact, O(U * chunk * N) live memory per step.
+
+    Normalization (eq. 12): the paper's literal
+    1/(P_t M sigma_h^2 beta_bar_c) with beta_bar_c = SUM_m beta damps
+    the estimate by 1/M and contradicts the unbiasedness step in its
+    own Lemma 6 proof; the consistent reading is beta_bar_c =
+    M * (average beta), i.e. divide by P_t sigma_h^2 SUM_m beta.  Then
+    E[est] = sum_m (beta_m/beta_bar_c) Delta_m — the beta-weighted
+    cluster mean, = the eq. (4) ideal mean for symmetric clusters.
+    All faithful backends share this normalization.
+    """
+
+    name = "reference"
+
+    def cluster(self, key, deltas, topo, P_t, cfg):
+        C, M, twoN = deltas.shape
+        N = twoN // 2
+        tx = pack_cx(deltas)  # [C, M, N]
+        beta = jnp.asarray(topo.beta_mu_is, jnp.float32)    # [C', M, C_rx]
+        if not cfg.interference:
+            # zero out cross-cluster path gains
+            eye = jnp.eye(C, dtype=jnp.float32)[:, None, :]
+            beta = beta * eye
+        beta_bar_c = jnp.asarray(topo.beta_bar_c, jnp.float32)  # [C]
+        K = topo.K
+        ck = _chunk(K, cfg.antenna_chunk)
+        n_steps = K // ck
+        keys = jax.random.split(key, n_steps)
+
+        def fold(acc, args):
+            kk, = args
+            k1, k2 = jax.random.split(kk)
+            # h[c', m, c_rx, a, n] = sqrt(beta) g, g ~ CN(0, sigma_h2)
+            g = _cn(k1, (C, M, C, ck, N), topo.sigma_h2)
+            h = jnp.sqrt(beta)[:, :, :, None, None] * g
+            z = _cn(k2, (C, ck, N), topo.sigma_z2)
+            # received per rx cluster/antenna (eq. 8)
+            y = P_t * jnp.einsum("umcan,umn->can", h, tx) + z
+            # own-cluster matched filter: sum_m h_{c,m,c,a,n} (eq. 9)
+            mf = _own(h)
+            acc = acc + jnp.einsum("can,can->cn", jnp.conj(mf), y)
+            return acc, None
+
+        acc0 = jnp.zeros((C, N), jnp.complex64)
+        acc, _ = jax.lax.scan(fold, acc0, (keys,))
+        scale = 1.0 / (P_t * topo.sigma_h2 * beta_bar_c)  # see class doc
+        est = acc / K * scale[:, None]
+        return unpack_cx(est)
+
+    def mac(self, key, deltas, beta, K, sigma_h2, sigma_z2, P, cfg):
+        U, twoN = deltas.shape
+        N = twoN // 2
+        tx = pack_cx(deltas)  # [U, N]
+        b = jnp.asarray(beta, jnp.float32)
+        b_bar = b.sum()
+        ck = _chunk(K, cfg.antenna_chunk)
+        n_steps = K // ck
+        keys = jax.random.split(key, n_steps)
+
+        def fold(acc, args):
+            kk, = args
+            k1, k2 = jax.random.split(kk)
+            g = _cn(k1, (U, ck, N), sigma_h2)
+            h = jnp.sqrt(b)[:, None, None] * g
+            z = _cn(k2, (ck, N), sigma_z2)
+            y = P * jnp.einsum("uan,un->an", h, tx) + z
+            mf = h.sum(axis=0)  # [a, n]
+            return acc + jnp.einsum("an,an->n", jnp.conj(mf), y), None
+
+        acc, _ = jax.lax.scan(fold, jnp.zeros((N,), jnp.complex64), (keys,))
+        est = acc / K / (P * sigma_h2 * b_bar)   # unbiased normalization
+        return unpack_cx(est)
+
+
+# ---------------------------------------------------------------------------
+# "equivalent": second-order moment-matched surrogate
+# ---------------------------------------------------------------------------
+
+class EquivalentBackend(ChannelBackend):
+    """Closed-form surrogate matched to the faithful model's first and
+    second moments (the production mode — ~K x cheaper)."""
+
+    name = "equivalent"
+
+    def cluster(self, key, deltas, topo, P_t, cfg):
+        """est[c] = (1/beta_bar_c) sum_m beta_m (1 + eps_{m,n}) D_{c,m}
+                    + CN(0, V_intra + V_inter + V_noise) per entry,
+
+        with eps ~ N(0, 1/K) (concentration of (1/K) sum_k |h|^2) and
+        variances from the Lemma 7/9 calculus.  The signal term uses
+        the same unbiased normalization as the faithful backends
+        (divide by beta_bar_c = SUM_m beta; see `ReferenceBackend`).
+        The intra-cluster interference weight is
+        w_intra[c,n] = sum_m' beta_m' |D_m'|^2 (beta_bar_c - beta_m'),
+        which equals sum_m beta_m sum_{m'!=m} beta_m' |D_m'|^2 after
+        swapping the two sums.
+        """
+        C, M, twoN = deltas.shape
+        N = twoN // 2
+        K = float(topo.K)
+        tx = pack_cx(deltas)  # [C, M, N]
+        beta = jnp.asarray(topo.beta_mu_is, jnp.float32)      # [C', M, C_rx]
+        beta_own = jnp.stack([beta[c, :, c] for c in range(C)])  # [C, M]
+        bb = jnp.asarray(topo.beta_bar_c, jnp.float32)           # [C]
+
+        k_eps, k_int, k_no = jax.random.split(key, 3)
+        eps = jax.random.normal(k_eps, (C, M, N), jnp.float32) / np.sqrt(K)
+        sig = jnp.einsum("cm,cmn->cn", beta_own.astype(jnp.complex64),
+                         tx * (1.0 + eps))
+        sig = sig / bb[:, None]
+
+        p2 = jnp.abs(tx) ** 2                                    # [C, M, N]
+        if cfg.interference:
+            b_sum = beta_own.sum(axis=1)                         # == bb
+            w_intra = jnp.einsum(
+                "cm,cmn->cn", beta_own,
+                p2 * (b_sum[:, None, None] - beta_own[..., None]))
+            V_intra = w_intra / (K * bb[:, None] ** 2)
+            # inter: sum_m beta_{c,m,c}
+            #        * sum_{c'!=c,m'} beta_{c',m',c} |D_{c',m'}|^2
+            cross = jnp.einsum("umc,umn->cn", beta, p2) - jnp.einsum(
+                "cm,cmn->cn", beta_own, p2)
+            V_inter = bb[:, None] * cross / (K * bb[:, None] ** 2)
+        else:
+            V_intra = V_inter = jnp.zeros((C, N), jnp.float32)
+        V_noise = topo.sigma_z2 / (
+            (P_t ** 2) * topo.sigma_h2 * bb[:, None] * K)
+        noise = _cn(k_no, (C, N), 1.0) * jnp.sqrt(V_intra + V_inter
+                                                  + V_noise)
+        return unpack_cx(sig + noise)
+
+    def mac(self, key, deltas, beta, K, sigma_h2, sigma_z2, P, cfg):
+        U, twoN = deltas.shape
+        N = twoN // 2
+        tx = pack_cx(deltas)
+        b = jnp.asarray(beta, jnp.float32)
+        b_bar = b.sum()
+        k_eps, k_no = jax.random.split(key)
+        eps = jax.random.normal(k_eps, (U, N), jnp.float32) / np.sqrt(
+            float(K))
+        sig = jnp.einsum("u,un->n", b.astype(jnp.complex64),
+                         tx * (1.0 + eps))
+        sig = sig / b_bar                        # unbiased normalization
+        if cfg.interference and U > 1:
+            p2 = jnp.abs(tx) ** 2
+            w = jnp.einsum("u,un->n", b, p2 * (b_bar - b)[:, None])
+            V_int = w / (float(K) * b_bar ** 2)
+        else:
+            V_int = jnp.zeros((N,), jnp.float32)
+        V_noise = sigma_z2 / ((P ** 2) * sigma_h2 * b_bar * float(K))
+        noise = _cn(k_no, (N,), 1.0) * jnp.sqrt(V_int + V_noise)
+        return unpack_cx(sig + noise)
+
+
+# ---------------------------------------------------------------------------
+# "slab_kernel": materialized channels + blocked Pallas combine
+# ---------------------------------------------------------------------------
+
+class SlabKernelBackend(ChannelBackend):
+    """Faithful Pallas path: draws the full channel slab with
+    jax.random, then runs the blocked matched-filter combine — all rx
+    stations in ONE kernel dispatch (grid batched over the rx axis).
+    Memory is O(C_rx * U * K * N): the throughput baseline the fused
+    backend removes.
+    """
+
+    name = "slab_kernel"
+
+    def cluster(self, key, deltas, topo, P_t, cfg):
+        from repro.kernels import mf_combine
+
+        C, M, twoN = deltas.shape
+        N = twoN // 2
+        U, K = C * M, topo.K
+        tx = pack_cx(deltas).reshape(U, N)
+        amp, own, bb = _cluster_geometry(topo, cfg)
+        k1, k2 = jax.random.split(key)
+        g = _cn(k1, (C, U, K, N), topo.sigma_h2)     # independent per rx
+        h = amp[:, :, None, None] * g
+        z = _cn(k2, (C, K, N), topo.sigma_z2)
+        y = mf_combine(h, P_t * tx, z, own)          # [C, N]
+        est = y / K / (P_t * topo.sigma_h2 * bb[:, None])
+        return unpack_cx(est)
+
+    def mac(self, key, deltas, beta, K, sigma_h2, sigma_z2, P, cfg):
+        from repro.kernels import mf_combine
+
+        U, twoN = deltas.shape
+        N = twoN // 2
+        tx = pack_cx(deltas)
+        b = jnp.asarray(beta, jnp.float32)
+        b_bar = b.sum()
+        k1, k2 = jax.random.split(key)
+        g = _cn(k1, (U, K, N), sigma_h2)
+        h = jnp.sqrt(b)[:, None, None] * g
+        z = _cn(k2, (K, N), sigma_z2)
+        y = mf_combine(h, P * tx, z)
+        return unpack_cx(y / K / (P * sigma_h2 * b_bar))
+
+
+# ---------------------------------------------------------------------------
+# "fused": on-the-fly channel generation inside the kernel
+# ---------------------------------------------------------------------------
+
+class FusedBackend(ChannelBackend):
+    """Faithful Pallas path for large U: channels and noise are derived
+    inside the kernel from a counter PRNG seeded by `key` — no [U,K,N]
+    tensor is ever materialized, channel memory is O(block).  Same
+    distribution as the reference (Rayleigh fading + AWGN), different
+    realizations (counter-based draws instead of jax.random).
+    """
+
+    name = "fused"
+
+    def cluster(self, key, deltas, topo, P_t, cfg):
+        from repro.kernels import fused_combine
+
+        C, M, twoN = deltas.shape
+        N = twoN // 2
+        U, K = C * M, topo.K
+        tx = pack_cx(deltas).reshape(U, N)
+        amp, own, bb = _cluster_geometry(topo, cfg)
+        y = fused_combine(_seed_words(key), P_t * tx, amp, own, K=K,
+                          sigma_h2=topo.sigma_h2, sigma_z2=topo.sigma_z2)
+        est = y / K / (P_t * topo.sigma_h2 * bb[:, None])
+        return unpack_cx(est)
+
+    def mac(self, key, deltas, beta, K, sigma_h2, sigma_z2, P, cfg):
+        from repro.kernels import fused_combine
+
+        U, twoN = deltas.shape
+        tx = pack_cx(deltas)
+        b = jnp.asarray(beta, jnp.float32)
+        amp = jnp.sqrt(b)[None, :]
+        w = jnp.ones((1, U), jnp.float32)
+        y = fused_combine(_seed_words(key), P * tx, amp, w, K=K,
+                          sigma_h2=sigma_h2, sigma_z2=sigma_z2)[0]
+        return unpack_cx(y / K / (P * sigma_h2 * b.sum()))
+
+
+register_backend(ReferenceBackend())
+register_backend(EquivalentBackend())
+register_backend(SlabKernelBackend())
+register_backend(FusedBackend())
+
+
+# ---------------------------------------------------------------------------
+# public hops (paper eq. 8-12, 15-19)
+# ---------------------------------------------------------------------------
+
+def cluster_ota(key, deltas: jax.Array, topo: Topology, P_t,
+                cfg: OTAConfig = OTAConfig()) -> jax.Array:
+    """Cluster aggregation hop (MUs -> ISs), eq. (8)-(12).
+
+    deltas: [C, M, 2N] (model differences of every MU).
+    Returns Delta_hat_IS: [C, 2N] — each IS's estimate of its cluster
+    mean.
+    """
+    if cfg.mode == "ideal":
+        return deltas.mean(axis=1)
+    return get_backend(resolve_backend(cfg)).cluster(key, deltas, topo,
+                                                     P_t, cfg)
+
 
 def global_ota(key, is_deltas: jax.Array, topo: Topology, P_is_t,
                cfg: OTAConfig = OTAConfig()) -> jax.Array:
-    """is_deltas: [C, 2N] (IS model differences). Returns [2N]."""
+    """Global aggregation hop (ISs -> PS), eq. (15)-(19).
+
+    is_deltas: [C, 2N] (IS model differences). Returns [2N].
+    """
     if cfg.mode == "ideal":
         return is_deltas.mean(axis=0)
     beta_is = np.asarray(topo.beta_is, np.float32)
-    if cfg.mode == "equivalent":
-        return _mac_equivalent(key, is_deltas, beta_is, topo.K_ps,
-                               topo.sigma_h2, topo.sigma_z2, P_is_t,
-                               cfg.interference)
-    return _mac_faithful(key, is_deltas, beta_is, topo.K_ps, topo.sigma_h2,
-                         topo.sigma_z2, P_is_t, cfg)
+    return get_backend(resolve_backend(cfg)).mac(
+        key, is_deltas, beta_is, topo.K_ps, topo.sigma_h2, topo.sigma_z2,
+        P_is_t, cfg)
 
 
 def conventional_ota(key, deltas: jax.Array, topo: Topology, P_t,
@@ -242,72 +498,8 @@ def conventional_ota(key, deltas: jax.Array, topo: Topology, P_t,
     the PS (paper's baseline). deltas: [C, M, 2N] -> [2N]."""
     C, M, twoN = deltas.shape
     flat = deltas.reshape(C * M, twoN)
-    beta = np.asarray(topo.beta_mu_ps, np.float32).reshape(C * M)
     if cfg.mode == "ideal":
         return flat.mean(axis=0)
-    if cfg.mode == "equivalent":
-        return _mac_equivalent(key, flat, beta, topo.K_ps, topo.sigma_h2,
-                               topo.sigma_z2, P_t, cfg.interference)
-    return _mac_faithful(key, flat, beta, topo.K_ps, topo.sigma_h2,
-                         topo.sigma_z2, P_t, cfg)
-
-
-def _mac_faithful(key, deltas, beta: np.ndarray, K: int, sigma_h2, sigma_z2,
-                  P, cfg: OTAConfig):
-    """Single-cell OTA MAC with U transmitters and K rx antennas.
-
-    deltas: [U, 2N]; beta: [U]. Returns the eq.(17)-rescaled estimate [2N].
-    Used for the IS->PS hop (U=C) and conventional FL (U=CM).
-    """
-    U, twoN = deltas.shape
-    N = twoN // 2
-    tx = pack_cx(deltas)  # [U, N]
-    b = jnp.asarray(beta, jnp.float32)
-    b_bar = b.sum()
-    if cfg.use_kernel:
-        from repro.kernels import mf_combine
-        k1, k2 = jax.random.split(key)
-        g = _cn(k1, (U, K, N), sigma_h2)
-        h = jnp.sqrt(b)[:, None, None] * g
-        z = _cn(k2, (K, N), sigma_z2)
-        y = mf_combine(h, P * tx, z)
-        return unpack_cx(y / K / (P * sigma_h2 * b_bar))
-    ck = _chunk(K, cfg.antenna_chunk)
-    n_steps = K // ck
-    keys = jax.random.split(key, n_steps)
-
-    def fold(acc, args):
-        kk, = args
-        k1, k2 = jax.random.split(kk)
-        g = _cn(k1, (U, ck, N), sigma_h2)
-        h = jnp.sqrt(b)[:, None, None] * g
-        z = _cn(k2, (ck, N), sigma_z2)
-        y = P * jnp.einsum("uan,un->an", h, tx) + z
-        mf = h.sum(axis=0)  # [a, n]
-        return acc + jnp.einsum("an,an->n", jnp.conj(mf), y), None
-
-    acc, _ = jax.lax.scan(fold, jnp.zeros((N,), jnp.complex64), (keys,))
-    est = acc / K / (P * sigma_h2 * b_bar)   # unbiased normalization
-    return unpack_cx(est)
-
-
-def _mac_equivalent(key, deltas, beta: np.ndarray, K: int, sigma_h2,
-                    sigma_z2, P, interference: bool):
-    U, twoN = deltas.shape
-    N = twoN // 2
-    tx = pack_cx(deltas)
-    b = jnp.asarray(beta, jnp.float32)
-    b_bar = b.sum()
-    k_eps, k_no = jax.random.split(key)
-    eps = jax.random.normal(k_eps, (U, N), jnp.float32) / np.sqrt(float(K))
-    sig = jnp.einsum("u,un->n", b.astype(jnp.complex64), tx * (1.0 + eps))
-    sig = sig / b_bar                        # unbiased normalization
-    if interference and U > 1:
-        p2 = jnp.abs(tx) ** 2
-        w = jnp.einsum("u,un->n", b, p2 * (b_bar - b)[:, None])
-        V_int = w / (float(K) * b_bar ** 2)
-    else:
-        V_int = jnp.zeros((N,), jnp.float32)
-    V_noise = sigma_z2 / ((P ** 2) * sigma_h2 * b_bar * float(K))
-    noise = _cn(k_no, (N,), 1.0) * jnp.sqrt(V_int + V_noise)
-    return unpack_cx(sig + noise)
+    beta = np.asarray(topo.beta_mu_ps, np.float32).reshape(C * M)
+    return get_backend(resolve_backend(cfg)).mac(
+        key, flat, beta, topo.K_ps, topo.sigma_h2, topo.sigma_z2, P_t, cfg)

@@ -217,10 +217,37 @@ class WHFLTrainer:
         return float(state["power_is"]) / max(n, 1.0)
 
 
+# Jitted per-apply_fn eval cores: the per-batch Python loop used to call
+# `apply_fn` untraced every batch of every eval, which dominated sweep
+# wall-clock between rounds.  One trace per (apply_fn, batch shape) now
+# covers every call; the final short batch is padded + masked so it
+# shares the same trace.
+_ACCURACY_JIT_CACHE: dict = {}
+
+
 def accuracy(apply_fn, params, X, Y, batch: int = 2000) -> float:
     n = len(X)
+    if n == 0:
+        return 0.0
+    count = _ACCURACY_JIT_CACHE.get(apply_fn)
+    if count is None:
+        def _count(p, xb, yb, mask):
+            logits = apply_fn(p, xb)
+            hit = (jnp.argmax(logits, -1) == yb) & mask
+            return jnp.sum(hit.astype(jnp.int32))
+
+        count = _ACCURACY_JIT_CACHE[apply_fn] = jax.jit(_count)
+    X, Y = jnp.asarray(X), jnp.asarray(Y)
+    batch = min(batch, n)
     correct = 0
     for i in range(0, n, batch):
-        logits = apply_fn(params, X[i:i + batch])
-        correct += int((jnp.argmax(logits, -1) == Y[i:i + batch]).sum())
+        xb, yb = X[i:i + batch], Y[i:i + batch]
+        m = xb.shape[0]
+        if m < batch:
+            pad = batch - m
+            xb = jnp.concatenate(
+                [xb, jnp.zeros((pad,) + xb.shape[1:], xb.dtype)])
+            yb = jnp.concatenate([yb, jnp.zeros((pad,), yb.dtype)])
+        mask = jnp.arange(batch) < m
+        correct += int(count(params, xb, yb, mask))
     return correct / n

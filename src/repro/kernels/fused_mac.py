@@ -1,0 +1,299 @@
+"""Fused OTA matched-filter combine with in-kernel channel generation.
+
+`ota_combine` (the "slab" kernel) consumes a precomputed `[U, K, N]`
+channel tensor from HBM, so its memory footprint — and the HBM traffic
+of one hop — scales as O(U*K*N).  At the ROADMAP's target user counts
+that slab cannot exist.  This kernel removes it: the Rayleigh fading
+channels `h[u, k, n]` and the receiver noise `z[k, n]` are *derived on
+the fly inside the kernel* from a counter-based PRNG, so the hop reads
+only the `[U, N]` transmit symbols and O(block) scratch — channel
+memory drops from O(U*K*N) to O(block_u * block_k * block_n).
+
+PRNG: threefry2x32 (the same 20-round Feistel jax.random uses),
+implemented with pure `jnp` uint32 ops so the kernel runs *identically*
+under ``interpret=True`` on CPU and compiled on TPU (the pinned jax
+0.4.37 makes `pltpu.prng_*` fragile off-TPU, and its draws would not be
+reproducible by the pure-jnp reference).  Each complex element draws
+one threefry block keyed on ``(seed, rx, stream)`` with the counter
+``(u * Kstride + k, n)``; the two 32-bit outputs feed a Box–Muller
+transform producing the (re, im) pair.  Counters depend only on the
+logical indices — never on block sizes — so every channel draw is
+invariant to the blocking (outputs differ across block sizes only by
+float accumulation order; pinned by tests) and exactly reproducible
+outside the kernel by `fused_channels` / `fused_mac_ref`.
+
+Layout mirrors `ota_combine`: planar float32 (re, im), symbol axis N in
+lanes, grid ``(B_rx, N/bn, K/bk, U/bu)`` with the two reduction axes
+(antennas, transmitters) minor.  Received signal and matched filter are
+accumulated in VMEM scratch over the U axis; the output block is
+revisited across K and finalized at the last U step.  The B_rx axis
+batches receiving stations (cluster hop: one dispatch for all C ISs,
+each with its own `[U]` amplitude row and matched-filter mask) — every
+rx draws independent channels, as in the paper's model.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_GOLDEN = np.uint32(0x9E3779B9)   # odd -> multiplication is bijective mod 2^32
+_STREAM = np.uint32(0x85EBCA77)
+_TAG_CHAN = np.uint32(1)
+_TAG_NOISE = np.uint32(2)
+_TWO_PI = np.float32(2.0 * np.pi)
+_U24 = np.float32(2.0 ** -24)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _k_stride(K: int) -> int:
+    """Counter stride of the antenna axis: fixed per K (never per block
+    size) so draws are invariant to blocking.  Uniqueness of the
+    ``u * Kstride + k`` counter word requires U * Kstride < 2^32."""
+    return _round_up(max(K, 1), 128)
+
+
+# ---------------------------------------------------------------------------
+# counter-based PRNG: threefry2x32 + Box-Muller, pure jnp uint32 ops
+# ---------------------------------------------------------------------------
+
+def _rotl(x, r: int):
+    return (x << r) | (x >> (32 - r))
+
+
+def _threefry2x32(k0, k1, x0, x1):
+    """The 20-round threefry2x32 block cipher (matches jax.random's
+    generator algorithm; arbitrary uint32 array shapes)."""
+    rotations = ((13, 15, 26, 6), (17, 29, 16, 24))
+    ks = (k0, k1, k0 ^ k1 ^ np.uint32(0x1BD11BDA))
+    x0 = x0 + ks[0]
+    x1 = x1 + ks[1]
+    for i in range(5):
+        for r in rotations[i % 2]:
+            x0 = x0 + x1
+            x1 = _rotl(x1, r)
+            x1 = x1 ^ x0
+        x0 = x0 + ks[(i + 1) % 3]
+        x1 = x1 + ks[(i + 2) % 3] + np.uint32(i + 1)
+    return x0, x1
+
+
+def _box_muller(b0, b1):
+    """Two uint32 words -> two independent N(0, 1) float32 draws."""
+    # u1 in (0, 1] (log-safe), u2 in [0, 1); 24-bit mantissa precision
+    u1 = 1.0 - (b0 >> 8).astype(jnp.float32) * _U24
+    u2 = (b1 >> 8).astype(jnp.float32) * _U24
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    theta = _TWO_PI * u2
+    return r * jnp.cos(theta), r * jnp.sin(theta)
+
+
+def _cx_normal(key0, key1, w0, w1, sigma: float):
+    """Per-element CN(0, 2*sigma^2) draw: (re, im) each N(0, sigma^2)."""
+    b0, b1 = _threefry2x32(key0, key1, w0, w1)
+    n0, n1 = _box_muller(b0, b1)
+    return sigma * n0, sigma * n1
+
+
+def _stream_keys(s0, s1, rx, tag):
+    """Fold (rx index, stream tag) into the seed words.  Distinct
+    (rx, tag) pairs give distinct threefry keys, hence independent
+    streams (threefry is a PRF over (key, counter))."""
+    rx = jnp.asarray(rx, jnp.uint32)
+    tagc = np.uint32((int(tag) * int(_STREAM)) & 0xFFFFFFFF)
+    return s0 + rx * _GOLDEN, s1 + tagc
+
+
+# ---------------------------------------------------------------------------
+# the fused kernel
+# ---------------------------------------------------------------------------
+
+def _fused_kernel(seed_ref, t_re_ref, t_im_ref, amp_ref, w_ref, y_ref,
+                  r_re, r_im, mf_re, mf_im, *, K: int, Kstride: int,
+                  sigma_h: float, sigma_z: float, bu: int, bk: int, bn: int):
+    """One (rx, n, k, u) block.
+
+    Scratch r (received signal) and mf (matched filter), both [bk, bn],
+    accumulate over the U grid axis; y [1, 2, bn] accumulates the
+    conj(mf) * r antenna fold over the K grid axis.
+    """
+    c = pl.program_id(0)
+    ni, ki, ui = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+    n_u = pl.num_programs(3)
+    s0, s1 = seed_ref[0, 0], seed_ref[0, 1]
+
+    k0 = ki * bk
+    n0 = ni * bn
+    kk = jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 0) + k0.astype(
+        jnp.uint32)
+    nn = jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 1) + n0.astype(
+        jnp.uint32)
+
+    @pl.when(ui == 0)
+    def _init_block():
+        # receiver noise z ~ CN(0, sigma_z2) seeds the r accumulator
+        zk0, zk1 = _stream_keys(s0, s1, c, _TAG_NOISE)
+        z_re, z_im = _cx_normal(zk0, zk1, kk, nn, sigma_z)
+        r_re[...] = z_re
+        r_im[...] = z_im
+        mf_re[...] = jnp.zeros_like(mf_re)
+        mf_im[...] = jnp.zeros_like(mf_im)
+
+    # this u-block's channels: h[u, k, n] = amp_u * g, g ~ CN(0, sigma_h2)
+    hk0, hk1 = _stream_keys(s0, s1, c, _TAG_CHAN)
+    uu = (jax.lax.broadcasted_iota(jnp.uint32, (bu, bk, bn), 0)
+          + (ui * bu).astype(jnp.uint32))
+    w0 = uu * np.uint32(Kstride) + kk[None, :, :]
+    w1 = jnp.broadcast_to(nn[None, :, :], (bu, bk, bn))
+    g_re, g_im = _cx_normal(hk0, hk1, w0, w1, sigma_h)
+
+    amp = amp_ref[0, :]                       # [bu]
+    wa = (w_ref[0, :] * amp)[:, None, None]   # matched filter uses w_u * h_u
+    h_re = amp[:, None, None] * g_re
+    h_im = amp[:, None, None] * g_im
+    t_re = t_re_ref[...][:, None, :]          # [bu, 1, bn]
+    t_im = t_im_ref[...][:, None, :]
+
+    r_re[...] += jnp.sum(h_re * t_re - h_im * t_im, axis=0)
+    r_im[...] += jnp.sum(h_re * t_im + h_im * t_re, axis=0)
+    mf_re[...] += jnp.sum(wa * g_re, axis=0)
+    mf_im[...] += jnp.sum(wa * g_im, axis=0)
+
+    @pl.when(ui == n_u - 1)
+    def _finish_block():
+        @pl.when(ki == 0)
+        def _init_out():
+            y_ref[...] = jnp.zeros_like(y_ref)
+
+        # padded antenna rows carry generated garbage: mask them out
+        mask = (kk < np.uint32(K)).astype(jnp.float32)
+        a, b = mf_re[...], mf_im[...]
+        p, q = r_re[...], r_im[...]
+        y_ref[0, 0, :] += jnp.sum(mask * (a * p + b * q), axis=0)
+        y_ref[0, 1, :] += jnp.sum(mask * (a * q - b * p), axis=0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("K", "sigma_h2", "sigma_z2", "block_n",
+                              "block_k", "block_u", "interpret"))
+def fused_mac(seed, t_re, t_im, amp, w, *, K: int, sigma_h2: float,
+              sigma_z2: float, block_n: int = 512, block_k: int = 8,
+              block_u: int = 32, interpret: bool = False):
+    """Fused OTA combine over K on-the-fly Rayleigh antennas:
+
+        y[b, n] = sum_k conj(sum_u w[b,u] h[b,u,k,n])
+                        * (sum_u h[b,u,k,n] t[u,n] + z[b,k,n])
+
+    with h[b,u,k,n] = amp[b,u] * g, g ~ CN(0, sigma_h2) and
+    z ~ CN(0, sigma_z2) derived in-kernel from `seed` (uint32 [2]).
+    No [U, K, N] array is ever materialized.
+
+    t: float32 [U, N] planar pair (transmit symbols, caller pre-scales
+    by P); amp, w: float32 [B, U].  Returns (y_re, y_im), each [B, N]
+    — un-rescaled, as `ota_combine` (caller divides by K and applies
+    the eq. (12)/(17) rescale).  Channel draws are invariant to block
+    sizes (outputs differ only by float accumulation order).
+    """
+    U, N = t_re.shape
+    B = amp.shape[0]
+    bn = min(block_n, _round_up(N, 128))
+    bk = min(block_k, _round_up(K, 1))
+    if bk > 128:
+        raise ValueError(f"block_k must be <= 128, got {bk}")
+    bu = min(block_u, U)
+    Np, Kp, Up = _round_up(N, bn), _round_up(K, bk), _round_up(U, bu)
+
+    # zero-pad: padded transmitters have amp = w = 0 and contribute
+    # nothing; padded antennas are masked in-kernel; padded symbols are
+    # sliced off below.
+    if Np != N:
+        t_re = jnp.pad(t_re, ((0, 0), (0, Np - N)))
+        t_im = jnp.pad(t_im, ((0, 0), (0, Np - N)))
+    if Up != U:
+        t_re = jnp.pad(t_re, ((0, Up - U), (0, 0)))
+        t_im = jnp.pad(t_im, ((0, Up - U), (0, 0)))
+        amp = jnp.pad(amp, ((0, 0), (0, Up - U)))
+        w = jnp.pad(w, ((0, 0), (0, Up - U)))
+
+    seed = seed.astype(jnp.uint32).reshape(1, 2)
+    grid = (B, Np // bn, Kp // bk, Up // bu)
+    kernel = functools.partial(
+        _fused_kernel, K=K, Kstride=_k_stride(K),
+        sigma_h=float(np.sqrt(sigma_h2 / 2.0)),
+        sigma_z=float(np.sqrt(sigma_z2 / 2.0)), bu=bu, bk=bk, bn=bn)
+
+    seed_spec = pl.BlockSpec((1, 2), lambda b, n, k, u: (0, 0))
+    t_spec = pl.BlockSpec((bu, bn), lambda b, n, k, u: (u, n))
+    a_spec = pl.BlockSpec((1, bu), lambda b, n, k, u: (b, u))
+    y_spec = pl.BlockSpec((1, 2, bn), lambda b, n, k, u: (b, 0, n))
+
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[seed_spec, t_spec, t_spec, a_spec, a_spec],
+        out_specs=y_spec,
+        out_shape=jax.ShapeDtypeStruct((B, 2, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)] * 4,
+        interpret=interpret,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=(
+                "parallel", "parallel", "arbitrary", "arbitrary"))
+        ) if not interpret else None,
+    )(seed, t_re, t_im, amp.astype(jnp.float32), w.astype(jnp.float32))
+    return y[:, 0, :N], y[:, 1, :N]
+
+
+# ---------------------------------------------------------------------------
+# pure-jnp reference: same draws, materialized (tests / small shapes)
+# ---------------------------------------------------------------------------
+
+def fused_channels(seed, B: int, U: int, K: int, N: int, sigma_h2: float,
+                   sigma_z2: float):
+    """Materialize the exact channel realizations the kernel derives:
+    g [B, U, K, N] complex64 ~ CN(0, sigma_h2) (unit amplitude — caller
+    applies amp) and z [B, K, N] ~ CN(0, sigma_z2).  O(B*U*K*N) memory:
+    for tests and small-shape oracles only."""
+    seed = jnp.asarray(seed).astype(jnp.uint32).reshape(2)
+    Kstride = np.uint32(_k_stride(K))
+    uu = jnp.arange(U, dtype=jnp.uint32)[:, None, None]
+    kk = jnp.arange(K, dtype=jnp.uint32)[None, :, None]
+    nn = jnp.arange(N, dtype=jnp.uint32)[None, None, :]
+    w0_h = jnp.broadcast_to(uu * Kstride + kk, (U, K, N))
+    w1_h = jnp.broadcast_to(nn, (U, K, N))
+    w0_z = jnp.broadcast_to(kk[0], (K, N))
+    w1_z = jnp.broadcast_to(nn[0], (K, N))
+    s_h = float(np.sqrt(sigma_h2 / 2.0))
+    s_z = float(np.sqrt(sigma_z2 / 2.0))
+
+    def one_rx(b):
+        hk0, hk1 = _stream_keys(seed[0], seed[1], b, _TAG_CHAN)
+        zk0, zk1 = _stream_keys(seed[0], seed[1], b, _TAG_NOISE)
+        g = jax.lax.complex(*_cx_normal(hk0, hk1, w0_h, w1_h, s_h))
+        z = jax.lax.complex(*_cx_normal(zk0, zk1, w0_z, w1_z, s_z))
+        return g, z
+
+    g, z = jax.lax.map(one_rx, jnp.arange(B, dtype=jnp.uint32))
+    return g, z
+
+
+def fused_mac_ref(seed, t_re, t_im, amp, w, *, K: int, sigma_h2: float,
+                  sigma_z2: float):
+    """Einsum oracle for `fused_mac`: materializes the same channel
+    realizations (identical counters) and folds them the slab way.
+    Must agree with the kernel to float-accumulation error."""
+    U, N = t_re.shape
+    B = amp.shape[0]
+    g, z = fused_channels(seed, B, U, K, N, sigma_h2, sigma_z2)
+    t = jax.lax.complex(t_re, t_im)
+    h = amp.astype(jnp.complex64)[:, :, None, None] * g       # [B,U,K,N]
+    r = jnp.einsum("bukn,un->bkn", h, t) + z
+    mf = jnp.einsum("bu,bukn->bkn", w.astype(jnp.complex64), h)
+    y = jnp.sum(jnp.conj(mf) * r, axis=1)                     # [B, N]
+    return jnp.real(y), jnp.imag(y)

@@ -36,6 +36,24 @@ def ota_combine_ref(h_re, h_im, t_re, t_im, z_re, z_im, w):
     return y_re, y_im
 
 
+def ota_combine_ref_batched(h_re, h_im, t_re, t_im, z_re, z_im, w):
+    """Batched-rx oracle: h [B,U,K,N]; t [U,N]; z [B,K,N]; w [B,U].
+
+    Returns (y_re [B,N], y_im [B,N]) — B independent matched-filter
+    combines sharing the transmit symbols (mirrors
+    `ota_combine_batched`).
+    """
+    r_re = jnp.einsum("bukn,un->bkn", h_re, t_re) - jnp.einsum(
+        "bukn,un->bkn", h_im, t_im) + z_re
+    r_im = jnp.einsum("bukn,un->bkn", h_re, t_im) + jnp.einsum(
+        "bukn,un->bkn", h_im, t_re) + z_im
+    mf_re = jnp.einsum("bu,bukn->bkn", w, h_re)
+    mf_im = jnp.einsum("bu,bukn->bkn", w, h_im)
+    y_re = jnp.sum(mf_re * r_re + mf_im * r_im, axis=1)
+    y_im = jnp.sum(mf_re * r_im - mf_im * r_re, axis=1)
+    return y_re, y_im
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True):
     """Pure-jnp oracle for kernels.flash_attn.flash_attention.
 

@@ -60,6 +60,8 @@ class Scenario:
     batch: int = 500
     mode: str = "whfl"               # "whfl" | "conventional"
     ota_mode: str = "equivalent"     # "equivalent" | "faithful" | "ideal"
+    ota_backend: str = ""            # channel backend ("" = mode default;
+    #                                  see repro.core.channel.BACKENDS)
     # topology (paper §V defaults)
     topology: str = "random"         # "random" | "uniform"
     C: int = 4
@@ -84,7 +86,9 @@ class Scenario:
 
     def whfl_config(self) -> WHFLConfig:
         return WHFLConfig(tau=self.tau, I=self.I, batch=self.batch,
-                          mode=self.mode, ota=OTAConfig(mode=self.ota_mode),
+                          mode=self.mode,
+                          ota=OTAConfig(mode=self.ota_mode,
+                                        backend=self.ota_backend),
                           power_low=(self.I == 1))
 
     def make_topology(self) -> Topology:
@@ -189,3 +193,18 @@ _register_family(Scenario(name="fig3_cifar", dataset="cifar",
                           partition="iid", tau=5, batch=128, lr=1e-3,
                           sigma_z2=1.0, n_test=1000),
                  baselines=True)
+
+# Scale family — beyond-paper user counts through the fused channel
+# backend (channels generated inside the kernel; no [U, K, N] slab, so
+# these run even where the slab/reference paths would exhaust memory).
+# Deliberately tiny on every axis that is not U: the point is the OTA
+# hop at U = C*M users, not convergence.
+SCALE_FAMILIES = ("scale_u256", "scale_u1024", "scale_u4096")
+
+for _U, _C, _M in ((256, 4, 64), (1024, 8, 128), (4096, 16, 256)):
+    register_scenario(Scenario(
+        name=f"scale_u{_U}", dataset="mnist", partition="iid",
+        tau=1, I=1, batch=16, mode="whfl", ota_mode="faithful",
+        ota_backend="fused", C=_C, M=_M, K=16, K_ps=16, sigma_z2=1.0,
+        total_IT=2, lr=5e-2, opt="sgd", n_train=4 * _U, n_test=512,
+        eval_every=1))

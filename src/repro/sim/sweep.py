@@ -246,8 +246,10 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
 
     if args.list:
         for name, sc in sorted(list_scenarios().items()):
+            ota = sc.ota_mode + (f"[{sc.ota_backend}]" if sc.ota_backend
+                                 else "")
             print(f"{name:28s} {sc.dataset}/{sc.partition} "
-                  f"tau={sc.tau} I={sc.I} mode={sc.mode}/{sc.ota_mode}")
+                  f"tau={sc.tau} I={sc.I} mode={sc.mode}/{ota}")
         return {}
 
     seeds = ([int(s) for s in args.seed_list.split(",")]

@@ -1,0 +1,140 @@
+"""Channel-backend registry: dispatch, resolution, `_chunk` edge cases,
+and the slow moment-matching gate for the `equivalent` surrogate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ChannelBackend, OTAConfig, cluster_ota,
+                        conventional_ota, get_backend, global_ota,
+                        list_backends, register_backend, resolve_backend,
+                        uniform_topology)
+from repro.core.channel import BACKENDS, _chunk
+
+
+# ---------------------------------------------------------------------------
+# registry + dispatch
+# ---------------------------------------------------------------------------
+
+def test_registry_has_four_backends():
+    names = set(list_backends())
+    assert {"reference", "equivalent", "slab_kernel", "fused"} <= names
+    for name in names:
+        assert get_backend(name).name == name
+
+
+def test_get_backend_unknown_raises_with_known_list():
+    with pytest.raises(KeyError, match="reference"):
+        get_backend("nope")
+
+
+def test_register_backend_rejects_duplicates():
+    class Dup(ChannelBackend):
+        name = "reference"
+
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend(Dup())
+
+
+def test_register_backend_overwrite_roundtrip():
+    class Temp(ChannelBackend):
+        name = "temp_test_backend"
+
+    try:
+        register_backend(Temp())
+        assert isinstance(get_backend("temp_test_backend"), Temp)
+    finally:
+        BACKENDS.pop("temp_test_backend", None)
+
+
+def test_resolve_backend_mode_defaults_and_override():
+    assert resolve_backend(OTAConfig(mode="faithful")) == "reference"
+    assert resolve_backend(OTAConfig(mode="equivalent")) == "equivalent"
+    # explicit backend wins over the mode default
+    assert resolve_backend(
+        OTAConfig(mode="faithful", backend="fused")) == "fused"
+    assert resolve_backend(
+        OTAConfig(mode="faithful", backend="slab_kernel")) == "slab_kernel"
+    with pytest.raises(ValueError, match="no default backend"):
+        resolve_backend(OTAConfig(mode="ideal"))
+
+
+def test_ideal_mode_wins_over_backend():
+    topo = uniform_topology(C=2, M=3, K=8, K_ps=8)
+    deltas = jnp.asarray(
+        np.random.default_rng(0).standard_normal((2, 3, 32)), jnp.float32)
+    cfg = OTAConfig(mode="ideal", backend="fused")
+    est = cluster_ota(jax.random.PRNGKey(0), deltas, topo, 1.0, cfg)
+    np.testing.assert_allclose(est, deltas.mean(1), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["reference", "equivalent",
+                                     "slab_kernel", "fused"])
+def test_all_backends_run_all_hops(backend):
+    """Every backend serves all three public hops with correct shapes
+    and finite output."""
+    topo = uniform_topology(C=2, M=3, K=8, K_ps=8, sigma_z2=0.5)
+    rng = np.random.default_rng(1)
+    deltas = jnp.asarray(rng.standard_normal((2, 3, 64)), jnp.float32)
+    cfg = OTAConfig(mode="faithful", backend=backend)
+    key = jax.random.PRNGKey(3)
+    est_c = cluster_ota(key, deltas, topo, 1.0, cfg)
+    est_g = global_ota(key, deltas.mean(1), topo, 20.0, cfg)
+    est_v = conventional_ota(key, deltas, topo, 1.0, cfg)
+    assert est_c.shape == (2, 64)
+    assert est_g.shape == (64,)
+    assert est_v.shape == (64,)
+    for e in (est_c, est_g, est_v):
+        assert bool(jnp.all(jnp.isfinite(e)))
+
+
+# ---------------------------------------------------------------------------
+# _chunk edge cases
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K,ck,expect", [
+    (13, 8, 1),     # K prime > chunk: falls to 1
+    (7, 7, 7),      # K prime, chunk == K
+    (8, 100, 8),    # chunk > K: clamps to K
+    (12, 8, 6),     # largest divisor <= chunk
+    (1, 8, 1),      # degenerate K
+    (64, 8, 8),     # exact
+])
+def test_chunk_edge_cases(K, ck, expect):
+    got = _chunk(K, ck)
+    assert got == expect
+    assert K % got == 0 and 1 <= got <= max(1, min(ck, K))
+
+
+# ---------------------------------------------------------------------------
+# moment matching: equivalent vs reference Monte-Carlo (slow tier)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_equivalent_first_second_moments_match_reference_mc():
+    """On a small (C, M, K, N), the closed-form `equivalent` surrogate
+    must reproduce the `reference` simulation's per-entry mean and
+    standard deviation within Monte-Carlo error."""
+    topo = uniform_topology(C=2, M=3, K=16, K_ps=16, sigma_z2=1.0)
+    rng = np.random.default_rng(5)
+    deltas = jnp.asarray(rng.standard_normal((2, 3, 64)), jnp.float32)
+    n_mc = 600
+    keys = jax.random.split(jax.random.PRNGKey(0), n_mc)
+
+    def mc(backend):
+        f = jax.jit(lambda k: cluster_ota(
+            k, deltas, topo, 1.0,
+            OTAConfig(mode="faithful", backend=backend)))
+        ests = jnp.stack([f(k) for k in keys])
+        return np.asarray(ests.mean(0)), np.asarray(ests.std(0))
+
+    m_ref, s_ref = mc("reference")
+    m_eq, s_eq = mc("equivalent")
+    # first moment: both unbiased for the beta-weighted cluster mean;
+    # difference bounded by combined MC error of the two estimators
+    tol = 6.0 * float(s_ref.mean()) / np.sqrt(n_mc)
+    assert np.abs(m_ref - m_eq).mean() < tol, (
+        np.abs(m_ref - m_eq).mean(), tol)
+    # second moment: mean per-entry std within 10 %
+    rel = abs(float(s_ref.mean()) - float(s_eq.mean())) / float(s_ref.mean())
+    assert rel < 0.10, (float(s_ref.mean()), float(s_eq.mean()))

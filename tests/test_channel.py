@@ -76,9 +76,10 @@ def test_equivalent_matches_faithful_variance():
 
 
 @pytest.mark.slow
-def test_kernel_path_matches_scan_path_statistics():
-    cfgk = OTAConfig(mode="faithful", use_kernel=True)
-    cfgs = OTAConfig(mode="faithful", use_kernel=False)
+@pytest.mark.parametrize("backend", ["slab_kernel", "fused"])
+def test_kernel_path_matches_scan_path_statistics(backend):
+    cfgk = OTAConfig(mode="faithful", backend=backend)
+    cfgs = OTAConfig(mode="faithful", backend="reference")
     ek = _mc(lambda k: cluster_ota(k, jnp.asarray(DELTAS), TOPO, 1.0, cfgk),
              n=200)
     es = _mc(lambda k: cluster_ota(k, jnp.asarray(DELTAS), TOPO, 1.0, cfgs),

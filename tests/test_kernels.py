@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import mf_combine, ota_combine, ota_combine_ref
+from repro.kernels import (mf_combine, ota_combine, ota_combine_batched,
+                           ota_combine_ref, ota_combine_ref_batched)
 
 
 def _mk(rng, U, K, N):
@@ -73,6 +74,52 @@ def test_mf_combine_default_weights_equal_ones():
     y2 = mf_combine(jnp.asarray(h), jnp.asarray(t), jnp.asarray(z),
                     jnp.ones((4,), jnp.float32))
     np.testing.assert_allclose(y1, y2)
+
+
+@pytest.mark.parametrize("B,U,K,N", [(2, 5, 8, 256), (3, 4, 7, 130)])
+def test_batched_kernel_matches_per_rx_dispatches(B, U, K, N):
+    """One batched-rx dispatch == B independent single-rx combines."""
+    rng = np.random.default_rng(B * 37 + N)
+    h = (rng.standard_normal((B, U, K, N))
+         + 1j * rng.standard_normal((B, U, K, N))).astype(np.complex64)
+    t = (rng.standard_normal((U, N))
+         + 1j * rng.standard_normal((U, N))).astype(np.complex64)
+    z = (rng.standard_normal((B, K, N))
+         + 1j * rng.standard_normal((B, K, N))).astype(np.complex64)
+    w = rng.standard_normal((B, U)).astype(np.float32)
+    args = (jnp.real(h), jnp.imag(h), jnp.real(t), jnp.imag(t),
+            jnp.real(z), jnp.imag(z), jnp.asarray(w))
+    yr, yi = ota_combine_batched(*args, interpret=True)
+    rr, ri = ota_combine_ref_batched(*args)
+    scale = float(jnp.abs(rr).max()) + 1e-6
+    np.testing.assert_allclose(yr, rr, atol=2e-6 * scale * np.sqrt(U * K))
+    np.testing.assert_allclose(yi, ri, atol=2e-6 * scale * np.sqrt(U * K))
+    for b in range(B):
+        sr, si = ota_combine(jnp.real(h[b]), jnp.imag(h[b]), jnp.real(t),
+                             jnp.imag(t), jnp.real(z[b]), jnp.imag(z[b]),
+                             jnp.asarray(w[b]), interpret=True)
+        np.testing.assert_allclose(yr[b], sr, atol=1e-6 * scale * K)
+        np.testing.assert_allclose(yi[b], si, atol=1e-6 * scale * K)
+
+
+def test_mf_combine_batched_complex_wrapper():
+    rng = np.random.default_rng(9)
+    B, U, K, N = 2, 4, 8, 192
+    h = (rng.standard_normal((B, U, K, N))
+         + 1j * rng.standard_normal((B, U, K, N))).astype(np.complex64)
+    t = (rng.standard_normal((U, N))
+         + 1j * rng.standard_normal((U, N))).astype(np.complex64)
+    z = (rng.standard_normal((B, K, N))
+         + 1j * rng.standard_normal((B, K, N))).astype(np.complex64)
+    w = rng.standard_normal((B, U)).astype(np.float32)
+    y = mf_combine(jnp.asarray(h), jnp.asarray(t), jnp.asarray(z),
+                   jnp.asarray(w))
+    rr, ri = ota_combine_ref_batched(
+        jnp.real(h), jnp.imag(h), jnp.real(t), jnp.imag(t), jnp.real(z),
+        jnp.imag(z), jnp.asarray(w))
+    np.testing.assert_allclose(jnp.real(y), rr, rtol=2e-4, atol=1e-3)
+    np.testing.assert_allclose(jnp.imag(y), ri, rtol=2e-4, atol=1e-3)
+    assert y.shape == (B, N)
 
 
 @pytest.mark.parametrize("dtype", [np.float32])
