@@ -77,6 +77,16 @@ def _record(name: str, backend: str, U: int, K: int, N: int, dt: float,
         "us_per_call": 1e6 * dt,
         "gflops": 8.0 * U * K * N / dt / 1e9,  # ~8 flops/(u,k,n) cmac
         "channel_bytes": channel_bytes,
+        # execution context, so the accumulated trajectory is comparable
+        # across runners (CPU-interpret vs TPU-compiled, 1 vs N devices).
+        # Only the Pallas cores fall back to interpret off-TPU; the jnp
+        # oracle is XLA-compiled everywhere.
+        "device_count": jax.device_count(),
+        "jax_backend": jax.default_backend(),
+        "exec_mode": ("compiled"
+                      if backend == "oracle"
+                      or jax.default_backend() == "tpu"
+                      else "interpret"),
     }
 
 
@@ -179,6 +189,7 @@ def main(quick: bool = True, smoke: bool = False,
                      f"max_rel_err={g['max_rel_err']:.2e};ok={g['ok']}")
 
     doc = {"schema": SCHEMA_VERSION, "backend": jax.default_backend(),
+           "device_count": jax.device_count(),
            "records": records, "parity": parity}
     return lines, doc
 

@@ -19,8 +19,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.fig2_mnist import SCHEMES
-from repro.sim import (FIG2_FAMILIES, SweepRunner, get_scenario,
-                       sweep_to_json)
+from repro.core.channel import BACKENDS
+from repro.exec import ENGINES, make_runner
+from repro.sim import FIG2_FAMILIES, get_scenario, sweep_to_json
 
 
 def main():
@@ -38,6 +39,18 @@ def main():
                     help="training seeds per scheme (vmapped, one compile)")
     ap.add_argument("--ota", default="equivalent",
                     choices=["equivalent", "faithful", "ideal"])
+    ap.add_argument("--backend", default="",
+                    choices=[""] + sorted(BACKENDS),
+                    help="channel backend for the non-ideal schemes "
+                         "('' = the --ota mode's default; see "
+                         "repro.core.channel.BACKENDS)")
+    ap.add_argument("--exec", default="single", dest="exec_name",
+                    choices=list(ENGINES),
+                    help="execution engine (sharded runs the round under "
+                         "shard_map on a --mesh device mesh)")
+    ap.add_argument("--mesh", default="1x1",
+                    help="CxU device mesh for --exec sharded (axes must "
+                         "divide --C and --M), e.g. 4x1")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -51,12 +64,12 @@ def main():
     for name, suffix in SCHEMES:
         sc = get_scenario(FIG2_FAMILIES[args.dist] + suffix).replace(**overrides)
         if sc.ota_mode != "ideal":  # keep the error-free baselines ideal
-            sc = sc.replace(ota_mode=args.ota)
+            sc = sc.replace(ota_mode=args.ota, ota_backend=args.backend)
         named.append((name, sc))
 
     seeds = list(range(args.seed, args.seed + args.seeds))
-    runner = SweepRunner([sc for _, sc in named], seeds=seeds,
-                         quick=args.quick)
+    runner = make_runner(args.exec_name, [sc for _, sc in named],
+                         seeds=seeds, quick=args.quick, mesh=args.mesh)
     results = runner.run()
 
     out_doc = sweep_to_json(results, quick=args.quick)

@@ -63,6 +63,36 @@ def init_round_state(params, opt: Optimizer, C: int, M: int):
     }
 
 
+def make_local_train(loss_fn: Callable, opt: Optimizer,
+                     cfg: WHFLConfig) -> Callable:
+    """Build one MU's local-training step ``local_train(theta,
+    opt_state, x, y, key, step) -> (delta, opt_state)``: `cfg.tau`
+    optimizer steps from `theta` on the user's shard, returning the
+    model difference (eq. 2).
+
+    This per-user program is the unit both execution engines map over
+    users — `make_round_fn` vmaps it over (cluster, user) on one
+    device, `repro.exec` lax.maps it over each mesh shard's local
+    users — so both engines train every user with the identical
+    computation.
+    """
+    def local_train(theta, opt_state, x, y, key, step):
+        def body(carry, k):
+            th, st = carry
+            kb, kd = jax.random.split(k)
+            idx = jax.random.randint(kb, (cfg.batch,), 0, x.shape[0])
+            grads = jax.grad(loss_fn)(th, x[idx], y[idx], kd)
+            upd, st = opt.update(grads, st, th, step)
+            return (apply_updates(th, upd), st), None
+
+        keys = jax.random.split(key, cfg.tau)
+        (th, st), _ = jax.lax.scan(body, (theta, opt_state), keys)
+        delta = jax.tree.map(lambda a, b: a - b, th, theta)
+        return delta, st
+
+    return local_train
+
+
 def make_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
                   cfg: WHFLConfig, spec: agg.FlatSpec, X, Y,
                   trace_counter: Optional[list] = None) -> Callable:
@@ -83,21 +113,7 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
     C, M = topo.C, topo.M
     X = jnp.asarray(X)
     Y = jnp.asarray(Y)
-
-    def local_train(theta, opt_state, x, y, key, step):
-        """One MU's tau local steps; vmapped over (cluster, user)."""
-        def body(carry, k):
-            th, st = carry
-            kb, kd = jax.random.split(k)
-            idx = jax.random.randint(kb, (cfg.batch,), 0, x.shape[0])
-            grads = jax.grad(loss_fn)(th, x[idx], y[idx], kd)
-            upd, st = opt.update(grads, st, th, step)
-            return (apply_updates(th, upd), st), None
-
-        keys = jax.random.split(key, cfg.tau)
-        (th, st), _ = jax.lax.scan(body, (theta, opt_state), keys)
-        delta = jax.tree.map(lambda a, b: a - b, th, theta)
-        return delta, st
+    local_train = make_local_train(loss_fn, opt, cfg)
 
     def users_train(theta_IS, opt_state, key, step):
         """theta_IS: [C]-stacked cluster models -> flat deltas [C,M,2N]."""

@@ -1,0 +1,53 @@
+"""`repro.exec` — execution engines for W-HFL rounds.
+
+The paper's hierarchy exists because user counts outgrow a single
+receiver; this package makes the *reproduction* scale the same way.
+Two engines share one contract (the `repro.sim` sweep API and JSON
+schema):
+
+- ``single`` — `repro.sim.SweepRunner`: the whole round (all users'
+  local training + both OTA hops) on one device.
+- ``sharded`` — `ShardedSweepRunner`: the round under `shard_map` on a
+  ``("cluster", "user")`` device mesh (`repro.exec.mesh`): local
+  training lax.mapped over each shard's users, the fused cluster hop
+  sharded over rx stations x symbols with per-shard counter bases
+  (`repro.exec.round`), results bitwise invariant to the mesh shape.
+
+Select via ``python -m repro.sim.sweep --exec sharded --mesh 2x4``; on
+CPU hosts force devices first, e.g.
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Union
+
+from repro.exec.mesh import (MESH_AXES, host_device_recipe,
+                             make_device_mesh, parse_mesh,
+                             validate_mesh_for)
+from repro.exec.round import make_sharded_round_fn
+from repro.exec.runner import ShardedSweepRunner
+from repro.sim.scenario import Scenario
+from repro.sim.sweep import SweepRunner
+
+ENGINES = ("single", "sharded")
+
+
+def make_runner(exec_name: str, scenarios: Sequence[Union[str, Scenario]],
+                *, seeds=1, quick: bool = False, batch: str = "vmap",
+                mesh: Union[str, tuple] = "1x1",
+                keep_state: bool = False) -> SweepRunner:
+    """Engine factory behind the ``--exec`` CLI flag."""
+    if exec_name == "single":
+        return SweepRunner(scenarios, seeds=seeds, quick=quick,
+                           keep_state=keep_state, batch=batch)
+    if exec_name == "sharded":
+        return ShardedSweepRunner(scenarios, seeds=seeds, quick=quick,
+                                  keep_state=keep_state, mesh=mesh)
+    raise ValueError(
+        f"unknown execution engine {exec_name!r}; known: "
+        f"{', '.join(ENGINES)}")
+
+
+__all__ = ["ENGINES", "MESH_AXES", "ShardedSweepRunner", "SweepRunner",
+           "host_device_recipe", "make_device_mesh", "make_runner",
+           "make_sharded_round_fn", "parse_mesh", "validate_mesh_for"]

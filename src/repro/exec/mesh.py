@@ -1,0 +1,74 @@
+"""Device meshes for the sharded W-HFL execution engine.
+
+The engine runs every round on a 2-D mesh with axes ``("cluster",
+"user")``: the scenario's C clusters are block-sharded over the
+``cluster`` axis and the M users of each cluster over the ``user``
+axis.  The same two axes double as the OTA-hop work split — receiving
+stations over ``cluster``, transmit symbols over ``user`` — so one
+mesh shape describes both phases of the round (see `repro.exec.round`).
+
+Meshes are *functions over jax.devices()*, never module constants
+(importing this module must not touch device state; CI forces host
+devices via XLA_FLAGS before any jax import — see `host_device_recipe`).
+"""
+from __future__ import annotations
+
+import re
+from typing import Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+MESH_AXES = ("cluster", "user")
+
+MeshShape = Union[str, Sequence[int], Tuple[int, int]]
+
+
+def parse_mesh(spec: MeshShape) -> Tuple[int, int]:
+    """``"2x4"`` (or ``(2, 4)``) -> ``(2, 4)``: #cluster-shards x
+    #user-shards."""
+    if isinstance(spec, str):
+        m = re.fullmatch(r"(\d+)\s*[xX*]\s*(\d+)", spec.strip())
+        if not m:
+            raise ValueError(
+                f"mesh spec {spec!r} is not of the form 'CxU' (e.g. '2x4')")
+        shape = (int(m.group(1)), int(m.group(2)))
+    else:
+        shape = tuple(int(s) for s in spec)
+    if len(shape) != 2 or shape[0] < 1 or shape[1] < 1:
+        raise ValueError(f"mesh shape must be two positive ints, got {shape}")
+    return shape
+
+
+def host_device_recipe(n: int) -> str:
+    """The CPU recipe for running an n-device mesh on one host (CI and
+    laptops): force XLA to expose n host devices *before* jax starts."""
+    return (f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"(set before the first jax import)")
+
+
+def make_device_mesh(shape: MeshShape) -> Mesh:
+    """Build the ``("cluster", "user")`` mesh over the first
+    ``prod(shape)`` available devices (row-major device order, so a
+    ``1x1`` mesh is always the plain single-device run)."""
+    mc, mu = parse_mesh(shape)
+    need = mc * mu
+    devs = jax.devices()
+    if len(devs) < need:
+        raise ValueError(
+            f"mesh {mc}x{mu} needs {need} devices but only {len(devs)} "
+            f"are visible; on a CPU host use {host_device_recipe(need)}")
+    return Mesh(np.asarray(devs[:need]).reshape(mc, mu), MESH_AXES)
+
+
+def validate_mesh_for(mesh: Mesh, C: int, M: int) -> Tuple[int, int]:
+    """Check the (C clusters, M users/cluster) workload divides the
+    mesh; returns the per-shard block ``(C_loc, M_loc)``."""
+    mc, mu = mesh.devices.shape
+    if C % mc or M % mu:
+        raise ValueError(
+            f"scenario (C={C}, M={M}) does not divide mesh "
+            f"{mc}x{mu}: C must be a multiple of {mc} and M of {mu} "
+            f"(pick a mesh whose axes divide the cluster/user counts)")
+    return C // mc, M // mu

@@ -1,0 +1,252 @@
+"""The W-HFL round under `shard_map`: one (cluster, user) mesh, two
+work splits, zero drift from the mesh shape.
+
+Phase 1 — local training.  The per-user program is
+`repro.core.whfl.make_local_train` (the same unit the single-device
+engine vmaps); here every mesh shard `jax.lax.map`s it over its local
+``(C_loc, M_loc)`` block of users.  `lax.map` runs the *identical*
+per-slice program for every block size, so each user's delta is
+bitwise the same no matter how many devices the users are spread over
+(the established `batch="map"` property of the sweep engine, applied
+to the user axis).
+
+Phase 2 — the OTA hops.  The cluster hop with the ``fused`` backend is
+the scaling path: every receiving IS hears every user, so the transmit
+symbols are redistributed (all_to_all over symbols, all_gather over
+clusters) and each shard runs the fused matched-filter combine for its
+``C_loc`` rx stations x ``N_loc`` symbols, passing its tile origin as
+the kernel's counter bases (`rx_base`/`n_base`).  The counter PRNG
+keys on global (rx, u, k, n) indices only, so every shard draws
+exactly the channels the full-range call would have drawn — the hop is
+bitwise invariant to mesh shape, and there is *no* cross-device
+reduction (the u/k folds happen entirely in-kernel, in a mesh-
+independent block order).  All other backends (reference /
+equivalent / ideal), the conventional baseline and the small IS -> PS
+hop gather the (much smaller) inputs and compute replicated — the same
+full-shape program on every device, which is trivially mesh-invariant.
+
+Power accounting sums per-user energies locally, gathers the tiny
+``[C, M]`` grid and folds it in a fixed order, again mesh-invariant.
+
+Everything runs *fully manual* (both mesh axes) — the pinned jax
+0.4.37 cannot lower partial-auto shard_map on XLA:CPU (see
+`repro.sharding.api.shard_map`).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import aggregation as agg
+from repro.core.channel import (_cluster_geometry, _seed_words, cluster_ota,
+                                conventional_ota, global_ota,
+                                resolve_backend)
+from repro.core.topology import Topology
+from repro.core.whfl import WHFLConfig, make_local_train
+from repro.exec.mesh import validate_mesh_for
+from repro.kernels import fused_mac
+# the executor's symbol padding must agree with the kernel's rounding
+from repro.kernels.fused_mac import _round_up
+from repro.optim import Optimizer, apply_updates
+from repro.sharding import shard_map
+
+
+def make_sharded_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
+                          cfg: WHFLConfig, spec: agg.FlatSpec, X, Y, mesh,
+                          trace_counter: Optional[list] = None) -> Callable:
+    """Build ``round_fn(state, key, P_t, P_is_t) -> state`` running one
+    W-HFL round sharded over `mesh` (axes ``("cluster", "user")``).
+
+    Same contract as `repro.core.whfl.make_round_fn` — pure, jit-able,
+    seed-batchable — plus the mesh-invariance guarantee: for a fixed
+    scenario and seed, the returned state is bitwise identical for
+    every mesh shape that divides (C, M), including ``1x1``
+    (`tests/test_exec_sharded.py` pins this).
+    """
+    C, M = topo.C, topo.M
+    C_loc, M_loc = validate_mesh_for(mesh, C, M)
+    mc, mu = mesh.devices.shape
+    two_n = spec.two_n
+    N = two_n // 2
+    Np = _round_up(N, mu)       # symbol axis padded to split over 'user'
+    N_loc = Np // mu
+    local_train = make_local_train(loss_fn, opt, cfg)
+    interpret = jax.default_backend() != "tpu"
+
+    backend = ("" if cfg.ota.mode == "ideal" else resolve_backend(cfg.ota))
+    fused_cluster_hop = (cfg.mode != "conventional" and backend == "fused")
+    if fused_cluster_hop:
+        amp, own, bb = _cluster_geometry(topo, cfg.ota)     # [C, U], .., [C]
+
+    X = jnp.asarray(X)
+    Y = jnp.asarray(Y)
+
+    # -- helpers (valid inside shard_map over ('cluster', 'user')) ----------
+
+    def _gather_cm(x_loc):
+        """[C_loc, M_loc, ...] shard -> full [C, M, ...] on every device."""
+        x = jax.lax.all_gather(x_loc, "user", axis=1, tiled=True)
+        return jax.lax.all_gather(x, "cluster", axis=0, tiled=True)
+
+    def _slice_c(tree, ci):
+        """Replicated [C, ...] pytree -> this shard's [C_loc, ...] rows."""
+        return jax.tree.map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, ci * C_loc, C_loc, 0),
+            tree)
+
+    def users_train(theta_IS, opt_loc, key, step, X_loc, Y_loc, ci, ui):
+        """Local training of this shard's users.
+
+        theta_IS: replicated [C]-stacked cluster models; opt/X/Y: the
+        shard's [C_loc, M_loc, ...] block.  Returns (flat deltas
+        [C_loc, M_loc, 2N], opt state, per-user energies [C_loc, M_loc]).
+        The full per-user key grid is derived exactly as in the single-
+        device engine and sliced to the local block, so user (c, m)
+        trains from the same key on every mesh.
+        """
+        keys = jax.random.split(key, C * M).reshape(C, M, 2)
+        keys_loc = jax.lax.dynamic_slice(
+            keys, (ci * C_loc, ui * M_loc, 0), (C_loc, M_loc, 2))
+        theta_loc = _slice_c(theta_IS, ci)
+
+        def one_cluster(args):
+            th_c, opt_c, x_c, y_c, k_c = args
+
+            def one_user(a):
+                st, x, y, k = a
+                delta, st = local_train(th_c, st, x, y, k, step)
+                flat = agg.flatten(spec, delta)
+                return flat, st, jnp.sum(jnp.square(flat))
+
+            return jax.lax.map(one_user, (opt_c, x_c, y_c, k_c))
+
+        flat, opt_loc, pw = jax.lax.map(
+            one_cluster, (theta_loc, opt_loc, X_loc, Y_loc, keys_loc))
+        return flat, opt_loc, pw
+
+    def edge_power(pw_loc, P_t):
+        """Mesh-invariant `agg.symbol_power`: per-user energies are
+        gathered to the tiny [C, M] grid and folded in a fixed order."""
+        pw = _gather_cm(pw_loc)
+        return jnp.mean((P_t ** 2) * pw / N)
+
+    def fused_cluster_estimate(key, flat_loc, P_t, ci, ui):
+        """Sharded fused cluster hop: rx stations over 'cluster',
+        symbols over 'user', channels drawn in-kernel at the shard's
+        global tile origin.  Returns the replicated [C, 2N] estimate —
+        identical to `FusedBackend.cluster` on one device."""
+        # redistribute (users -> symbols): [C_loc, M_loc, N] local users
+        # with all symbols  ->  [U, N_loc] all users, local symbols
+        def redistribute(t):
+            t = jnp.pad(t, ((0, 0), (0, 0), (0, Np - N)))
+            t = jax.lax.all_to_all(t, "user", split_axis=2, concat_axis=1,
+                                   tiled=True)            # [C_loc, M, N_loc]
+            t = jax.lax.all_gather(t, "cluster", axis=0, tiled=True)
+            return t.reshape(C * M, N_loc)
+
+        t_re = P_t * redistribute(flat_loc[..., :N])
+        t_im = P_t * redistribute(flat_loc[..., N:])
+        amp_loc = jax.lax.dynamic_slice_in_dim(amp, ci * C_loc, C_loc, 0)
+        own_loc = jax.lax.dynamic_slice_in_dim(own, ci * C_loc, C_loc, 0)
+        bb_loc = jax.lax.dynamic_slice_in_dim(bb, ci * C_loc, C_loc, 0)
+        # block sizes depend only on the GLOBAL user count (never on the
+        # mesh), so the per-element accumulation order — and with it the
+        # bitwise mesh-invariance — is preserved; bigger blocks amortize
+        # the interpret-mode grid overhead at very large U.
+        blocks = (dict(block_u=1024, block_n=1024) if C * M >= 8192
+                  else {})
+        y_re, y_im = fused_mac(
+            _seed_words(key), t_re, t_im, amp_loc, own_loc, K=topo.K,
+            sigma_h2=topo.sigma_h2, sigma_z2=topo.sigma_z2,
+            rx_base=ci * C_loc, n_base=ui * N_loc, interpret=interpret,
+            **blocks)
+        scale = P_t * topo.sigma_h2 * bb_loc[:, None]
+
+        def collect(y):                       # [C_loc, N_loc] -> [C, N]
+            y = jax.lax.all_gather(y, "user", axis=1, tiled=True)[:, :N]
+            return jax.lax.all_gather(y, "cluster", axis=0, tiled=True)
+
+        est_re = collect(y_re / topo.K / scale)
+        est_im = collect(y_im / topo.K / scale)
+        return jnp.concatenate([est_re, est_im], axis=-1)   # [C, 2N]
+
+    def cluster_estimate(key, flat_loc, P_t, ci, ui):
+        if fused_cluster_hop:
+            return fused_cluster_estimate(key, flat_loc, P_t, ci, ui)
+        # small/closed-form backends: gather and compute replicated
+        return cluster_ota(key, _gather_cm(flat_loc), topo, P_t, cfg.ota)
+
+    # -- the round body ------------------------------------------------------
+
+    def _round(state, key, P_t, P_is_t, X_loc, Y_loc):
+        if trace_counter is not None:
+            trace_counter[0] += 1  # python side effect: runs at trace time
+        ci = jax.lax.axis_index("cluster")
+        ui = jax.lax.axis_index("user")
+        theta = state["theta"]
+        step = state["t"]
+        theta_IS = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (C,) + x.shape), theta)
+
+        if cfg.mode == "conventional":
+            k1, k2 = jax.random.split(key)
+            flat_loc, opt_state, pw = users_train(
+                theta_IS, state["opt"], k1, step, X_loc, Y_loc, ci, ui)
+            est = conventional_ota(k2, _gather_cm(flat_loc), topo, P_t,
+                                   cfg.ota)
+            theta = apply_updates(theta, agg.unflatten(spec, est))
+            return {**state, "theta": theta, "opt": opt_state,
+                    "t": step + 1,
+                    "power_edge": state["power_edge"] + edge_power(pw, P_t),
+                    "n_edge_tx": state["n_edge_tx"] + 1.0,
+                    "power_is": state["power_is"],
+                    "n_is_tx": state["n_is_tx"]}
+
+        # --- W-HFL ---
+        def cluster_iter(carry, k):
+            th_IS, opt_state, p_acc = carry
+            k1, k2 = jax.random.split(k)
+            flat_loc, opt_state, pw = users_train(
+                th_IS, opt_state, k1, step, X_loc, Y_loc, ci, ui)
+            est = cluster_estimate(k2, flat_loc, P_t, ci, ui)    # [C, 2N]
+            th_IS = jax.vmap(
+                lambda th, e: apply_updates(th, agg.unflatten(spec, e))
+            )(th_IS, est)
+            return (th_IS, opt_state, p_acc + edge_power(pw, P_t)), None
+
+        keys = jax.random.split(key, cfg.I + 1)
+        (theta_IS, opt_state, p_edge), _ = jax.lax.scan(
+            cluster_iter, (theta_IS, state["opt"], jnp.zeros(())),
+            keys[: cfg.I])
+
+        is_deltas = jax.vmap(
+            lambda th: agg.flatten(
+                spec, jax.tree.map(lambda a, b: a - b, th, theta)))(theta_IS)
+        est = global_ota(keys[-1], is_deltas, topo, P_is_t, cfg.ota)
+        theta = apply_updates(theta, agg.unflatten(spec, est))
+        p_is = agg.symbol_power(is_deltas, P_is_t)
+        return {**state, "theta": theta, "opt": opt_state, "t": step + 1,
+                "power_edge": state["power_edge"] + p_edge,
+                "n_edge_tx": state["n_edge_tx"] + float(cfg.I),
+                "power_is": state["power_is"] + p_is,
+                "n_is_tx": state["n_is_tx"] + 1.0}
+
+    state_spec = {
+        "theta": P(), "opt": P("cluster", "user"), "t": P(),
+        "power_edge": P(), "power_is": P(), "n_edge_tx": P(),
+        "n_is_tx": P(),
+    }
+    sharded = shard_map(
+        _round, mesh=mesh,
+        in_specs=(state_spec, P(), P(), P(),
+                  P("cluster", "user"), P("cluster", "user")),
+        out_specs=state_spec, check_vma=False)
+
+    def round_fn(state, key, P_t, P_is_t):
+        return sharded(state, key, jnp.float32(P_t), jnp.float32(P_is_t),
+                       X, Y)
+
+    return round_fn

@@ -1,0 +1,54 @@
+"""`ShardedSweepRunner`: the sweep engine on a device mesh.
+
+Drop-in `repro.sim.SweepRunner` subclass — same scenarios, same seed
+batching, same JSON schema — that swaps the single-device round for
+`repro.exec.round.make_sharded_round_fn` on a ``("cluster", "user")``
+mesh.  Seeds run through ``jax.lax.map`` (the bitwise-reproducible
+batch mode), so a sweep slice equals the same seed swept alone *and*
+the whole trajectory is bitwise invariant to the mesh shape: the
+``1x1`` mesh is the reference run and ``2x4`` reproduces it exactly
+(`tests/test_exec_sharded.py`).
+
+    PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.sim.sweep --scenarios scale_u256 --seeds 2 \
+            --exec sharded --mesh 2x4
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence, Union
+
+from repro.exec.mesh import make_device_mesh, parse_mesh
+from repro.exec.round import make_sharded_round_fn
+from repro.sim.scenario import Scenario
+from repro.sim.sweep import SweepRunner
+
+
+class ShardedSweepRunner(SweepRunner):
+    """Run scenarios sharded over a ``(cluster, user)`` device mesh.
+
+    mesh: ``"CxU"`` string or ``(C_shards, U_shards)`` tuple.  Each
+    scenario must divide the mesh (C % C_shards == 0, M % U_shards ==
+    0); the symbol axis of the fused OTA hop is padded to split evenly.
+    The seed axis always uses the ``map`` batch mode — the sharded
+    engine's contract is bitwise reproducibility, which vmap's
+    batch-size-dependent lowering would break.
+    """
+
+    def __init__(self, scenarios: Sequence[Union[str, Scenario]],
+                 seeds=1, quick: bool = False, keep_state: bool = False,
+                 mesh: Union[str, tuple] = "1x1"):
+        super().__init__(scenarios, seeds=seeds, quick=quick,
+                         keep_state=keep_state, batch="map")
+        self.mesh_shape = parse_mesh(mesh)
+        self.mesh = make_device_mesh(self.mesh_shape)
+
+    def _build_round(self, sc, loss_fn, opt, topo, cfg, spec, X, Y, counter):
+        round_fn = make_sharded_round_fn(loss_fn, opt, topo, cfg, spec,
+                                         X, Y, self.mesh,
+                                         trace_counter=counter)
+        return self._batch_round(round_fn)
+
+    def _exec_info(self) -> Dict:
+        mc, mu = self.mesh_shape
+        return {"name": "sharded", "mesh": f"{mc}x{mu}",
+                "device_count": mc * mu, "batch": self.batch}

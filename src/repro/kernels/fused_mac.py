@@ -22,6 +22,17 @@ invariant to the blocking (outputs differ across block sizes only by
 float accumulation order; pinned by tests) and exactly reproducible
 outside the kernel by `fused_channels` / `fused_mac_ref`.
 
+Counter bases: ``rx_base`` / ``u_base`` / ``n_base`` shift the *global*
+logical indices the counters are built from, as explicit (traceable)
+arguments rather than anything derived from block or device placement.
+A caller that owns only a tile of the full (rx, u, n) index space —
+e.g. one shard of the `repro.exec` device mesh — passes the tile's
+origin and draws exactly the channels a full-range call would have
+drawn for those indices, which is what makes the sharded combine
+bitwise invariant to mesh shape.  `assert_draw_invariance` verifies
+the property (offset generation == slice of the enclosing full-range
+generation, bit-exact).
+
 Layout mirrors `ota_combine`: planar float32 (re, im), symbol axis N in
 lanes, grid ``(B_rx, N/bn, K/bk, U/bu)`` with the two reduction axes
 (antennas, transmitters) minor.  Received signal and matched filter are
@@ -115,11 +126,13 @@ def _stream_keys(s0, s1, rx, tag):
 # the fused kernel
 # ---------------------------------------------------------------------------
 
-def _fused_kernel(seed_ref, t_re_ref, t_im_ref, amp_ref, w_ref, y_ref,
+def _fused_kernel(words_ref, t_re_ref, t_im_ref, amp_ref, w_ref, y_ref,
                   r_re, r_im, mf_re, mf_im, *, K: int, Kstride: int,
                   sigma_h: float, sigma_z: float, bu: int, bk: int, bn: int):
     """One (rx, n, k, u) block.
 
+    `words_ref` [1, 8] uint32 packs the two seed words plus the global
+    counter bases (rx_base, u_base, n_base) — see module docstring.
     Scratch r (received signal) and mf (matched filter), both [bk, bn],
     accumulate over the U grid axis; y [1, 2, bn] accumulates the
     conj(mf) * r antenna fold over the K grid axis.
@@ -127,19 +140,22 @@ def _fused_kernel(seed_ref, t_re_ref, t_im_ref, amp_ref, w_ref, y_ref,
     c = pl.program_id(0)
     ni, ki, ui = pl.program_id(1), pl.program_id(2), pl.program_id(3)
     n_u = pl.num_programs(3)
-    s0, s1 = seed_ref[0, 0], seed_ref[0, 1]
+    s0, s1 = words_ref[0, 0], words_ref[0, 1]
+    rx_base, u_base, n_base = (words_ref[0, 2], words_ref[0, 3],
+                               words_ref[0, 4])
+    rx = rx_base + c.astype(jnp.uint32)
 
     k0 = ki * bk
     n0 = ni * bn
     kk = jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 0) + k0.astype(
         jnp.uint32)
-    nn = jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 1) + n0.astype(
-        jnp.uint32)
+    nn = (jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 1)
+          + n0.astype(jnp.uint32) + n_base)
 
     @pl.when(ui == 0)
     def _init_block():
         # receiver noise z ~ CN(0, sigma_z2) seeds the r accumulator
-        zk0, zk1 = _stream_keys(s0, s1, c, _TAG_NOISE)
+        zk0, zk1 = _stream_keys(s0, s1, rx, _TAG_NOISE)
         z_re, z_im = _cx_normal(zk0, zk1, kk, nn, sigma_z)
         r_re[...] = z_re
         r_im[...] = z_im
@@ -147,9 +163,9 @@ def _fused_kernel(seed_ref, t_re_ref, t_im_ref, amp_ref, w_ref, y_ref,
         mf_im[...] = jnp.zeros_like(mf_im)
 
     # this u-block's channels: h[u, k, n] = amp_u * g, g ~ CN(0, sigma_h2)
-    hk0, hk1 = _stream_keys(s0, s1, c, _TAG_CHAN)
+    hk0, hk1 = _stream_keys(s0, s1, rx, _TAG_CHAN)
     uu = (jax.lax.broadcasted_iota(jnp.uint32, (bu, bk, bn), 0)
-          + (ui * bu).astype(jnp.uint32))
+          + (ui * bu).astype(jnp.uint32) + u_base)
     w0 = uu * np.uint32(Kstride) + kk[None, :, :]
     w1 = jnp.broadcast_to(nn[None, :, :], (bu, bk, bn))
     g_re, g_im = _cx_normal(hk0, hk1, w0, w1, sigma_h)
@@ -184,7 +200,8 @@ def _fused_kernel(seed_ref, t_re_ref, t_im_ref, amp_ref, w_ref, y_ref,
     jax.jit, static_argnames=("K", "sigma_h2", "sigma_z2", "block_n",
                               "block_k", "block_u", "interpret"))
 def fused_mac(seed, t_re, t_im, amp, w, *, K: int, sigma_h2: float,
-              sigma_z2: float, block_n: int = 512, block_k: int = 8,
+              sigma_z2: float, rx_base=None, u_base=None, n_base=None,
+              block_n: int = 512, block_k: int = 8,
               block_u: int = 32, interpret: bool = False):
     """Fused OTA combine over K on-the-fly Rayleigh antennas:
 
@@ -200,6 +217,12 @@ def fused_mac(seed, t_re, t_im, amp, w, *, K: int, sigma_h2: float,
     — un-rescaled, as `ota_combine` (caller divides by K and applies
     the eq. (12)/(17) rescale).  Channel draws are invariant to block
     sizes (outputs differ only by float accumulation order).
+
+    `rx_base` / `u_base` / `n_base` (int or traced uint32 scalar,
+    default 0) shift the global logical indices behind the counter
+    PRNG: a call over a (rx, u, n) tile of a larger index space draws
+    exactly the channels the full-range call draws there, so sharded
+    callers (repro.exec) stay bitwise-invariant to the mesh shape.
     """
     U, N = t_re.shape
     B = amp.shape[0]
@@ -222,14 +245,17 @@ def fused_mac(seed, t_re, t_im, amp, w, *, K: int, sigma_h2: float,
         amp = jnp.pad(amp, ((0, 0), (0, Up - U)))
         w = jnp.pad(w, ((0, 0), (0, Up - U)))
 
-    seed = seed.astype(jnp.uint32).reshape(1, 2)
+    base = jnp.stack([jnp.asarray(0 if v is None else v, jnp.uint32)
+                      for v in (rx_base, u_base, n_base)])
+    words = jnp.concatenate([seed.astype(jnp.uint32).reshape(2), base,
+                             jnp.zeros((3,), jnp.uint32)]).reshape(1, 8)
     grid = (B, Np // bn, Kp // bk, Up // bu)
     kernel = functools.partial(
         _fused_kernel, K=K, Kstride=_k_stride(K),
         sigma_h=float(np.sqrt(sigma_h2 / 2.0)),
         sigma_z=float(np.sqrt(sigma_z2 / 2.0)), bu=bu, bk=bk, bn=bn)
 
-    seed_spec = pl.BlockSpec((1, 2), lambda b, n, k, u: (0, 0))
+    seed_spec = pl.BlockSpec((1, 8), lambda b, n, k, u: (0, 0))
     t_spec = pl.BlockSpec((bu, bn), lambda b, n, k, u: (u, n))
     a_spec = pl.BlockSpec((1, bu), lambda b, n, k, u: (b, u))
     y_spec = pl.BlockSpec((1, 2, bn), lambda b, n, k, u: (b, 0, n))
@@ -246,7 +272,7 @@ def fused_mac(seed, t_re, t_im, amp, w, *, K: int, sigma_h2: float,
             mosaic=dict(dimension_semantics=(
                 "parallel", "parallel", "arbitrary", "arbitrary"))
         ) if not interpret else None,
-    )(seed, t_re, t_im, amp.astype(jnp.float32), w.astype(jnp.float32))
+    )(words, t_re, t_im, amp.astype(jnp.float32), w.astype(jnp.float32))
     return y[:, 0, :N], y[:, 1, :N]
 
 
@@ -255,16 +281,23 @@ def fused_mac(seed, t_re, t_im, amp, w, *, K: int, sigma_h2: float,
 # ---------------------------------------------------------------------------
 
 def fused_channels(seed, B: int, U: int, K: int, N: int, sigma_h2: float,
-                   sigma_z2: float):
+                   sigma_z2: float, rx_base=0, u_base=0, n_base=0):
     """Materialize the exact channel realizations the kernel derives:
     g [B, U, K, N] complex64 ~ CN(0, sigma_h2) (unit amplitude — caller
     applies amp) and z [B, K, N] ~ CN(0, sigma_z2).  O(B*U*K*N) memory:
-    for tests and small-shape oracles only."""
+    for tests and small-shape oracles only.
+
+    The counter bases shift the global (rx, u, n) indices exactly as in
+    `fused_mac`: with bases (rb, ub, nb) the returned g equals the
+    [rb:rb+B, ub:ub+U, :, nb:nb+N] slice of the base-0 generation
+    (bit-exact; `assert_draw_invariance` checks it)."""
     seed = jnp.asarray(seed).astype(jnp.uint32).reshape(2)
     Kstride = np.uint32(_k_stride(K))
-    uu = jnp.arange(U, dtype=jnp.uint32)[:, None, None]
+    uu = (jnp.arange(U, dtype=jnp.uint32)
+          + jnp.asarray(u_base, jnp.uint32))[:, None, None]
     kk = jnp.arange(K, dtype=jnp.uint32)[None, :, None]
-    nn = jnp.arange(N, dtype=jnp.uint32)[None, None, :]
+    nn = (jnp.arange(N, dtype=jnp.uint32)
+          + jnp.asarray(n_base, jnp.uint32))[None, None, :]
     w0_h = jnp.broadcast_to(uu * Kstride + kk, (U, K, N))
     w1_h = jnp.broadcast_to(nn, (U, K, N))
     w0_z = jnp.broadcast_to(kk[0], (K, N))
@@ -279,18 +312,42 @@ def fused_channels(seed, B: int, U: int, K: int, N: int, sigma_h2: float,
         z = jax.lax.complex(*_cx_normal(zk0, zk1, w0_z, w1_z, s_z))
         return g, z
 
-    g, z = jax.lax.map(one_rx, jnp.arange(B, dtype=jnp.uint32))
+    rx0 = jnp.asarray(rx_base, jnp.uint32)
+    g, z = jax.lax.map(one_rx, jnp.arange(B, dtype=jnp.uint32) + rx0)
     return g, z
 
 
+def assert_draw_invariance(seed, B: int, U: int, K: int, N: int,
+                           sigma_h2: float = 1.0, sigma_z2: float = 1.0,
+                           *, rx_base: int = 0, u_base: int = 0,
+                           n_base: int = 0) -> None:
+    """Assert (bit-exact) that offset generation equals the matching
+    slice of the enclosing full-range generation — the invariant the
+    sharded executor relies on when it hands each mesh shard its tile
+    origin instead of the full index space."""
+    g_o, z_o = fused_channels(seed, B, U, K, N, sigma_h2, sigma_z2,
+                              rx_base=rx_base, u_base=u_base, n_base=n_base)
+    g_f, z_f = fused_channels(seed, rx_base + B, u_base + U, K, n_base + N,
+                              sigma_h2, sigma_z2)
+    ok_g = bool(jnp.all(g_o == g_f[rx_base:, u_base:, :, n_base:]))
+    ok_z = bool(jnp.all(z_o == z_f[rx_base:, :, n_base:]))
+    if not (ok_g and ok_z):
+        raise AssertionError(
+            f"counter-offset draws diverge from the full-range slice "
+            f"(g ok={ok_g}, z ok={ok_z}) for bases "
+            f"rx={rx_base}, u={u_base}, n={n_base}")
+
+
 def fused_mac_ref(seed, t_re, t_im, amp, w, *, K: int, sigma_h2: float,
-                  sigma_z2: float):
+                  sigma_z2: float, rx_base=0, u_base=0, n_base=0):
     """Einsum oracle for `fused_mac`: materializes the same channel
-    realizations (identical counters) and folds them the slab way.
-    Must agree with the kernel to float-accumulation error."""
+    realizations (identical counters, identical counter bases) and
+    folds them the slab way.  Must agree with the kernel to
+    float-accumulation error."""
     U, N = t_re.shape
     B = amp.shape[0]
-    g, z = fused_channels(seed, B, U, K, N, sigma_h2, sigma_z2)
+    g, z = fused_channels(seed, B, U, K, N, sigma_h2, sigma_z2,
+                          rx_base=rx_base, u_base=u_base, n_base=n_base)
     t = jax.lax.complex(t_re, t_im)
     h = amp.astype(jnp.complex64)[:, :, None, None] * g       # [B,U,K,N]
     r = jnp.einsum("bukn,un->bkn", h, t) + z

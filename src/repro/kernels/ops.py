@@ -56,7 +56,8 @@ def mf_combine(h: jax.Array, t: jax.Array, z: jax.Array,
 
 def fused_combine(seed: jax.Array, t: jax.Array, amp: jax.Array,
                   w: jax.Array, *, K: int, sigma_h2: float,
-                  sigma_z2: float, block_n: int = 512, block_k: int = 8,
+                  sigma_z2: float, rx_base=None, n_base=None,
+                  u_base=None, block_n: int = 512, block_k: int = 8,
                   block_u: int = 32) -> jax.Array:
     """Fused combine over on-the-fly channels (no [U,K,N] slab).
 
@@ -65,9 +66,15 @@ def fused_combine(seed: jax.Array, t: jax.Array, amp: jax.Array,
     amplitudes (sqrt of large-scale fading per rx station); w: float32
     [B, U] matched-filter weights.  Returns complex64 [B, N] — the
     un-rescaled eq. (9)/(16) combine per rx station.
+
+    `rx_base`/`u_base`/`n_base` are the global counter bases of this
+    call's (rx, u, n) tile (see `repro.kernels.fused_mac`): sharded
+    callers pass their tile origin so every shard draws the channels
+    of its global indices, bitwise independent of the mesh shape.
     """
     y_re, y_im = fused_mac(seed, jnp.real(t), jnp.imag(t), amp, w, K=K,
                            sigma_h2=sigma_h2, sigma_z2=sigma_z2,
+                           rx_base=rx_base, u_base=u_base, n_base=n_base,
                            block_n=block_n, block_k=block_k,
                            block_u=block_u, interpret=not _on_tpu())
     return jax.lax.complex(y_re, y_im)

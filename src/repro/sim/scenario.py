@@ -199,7 +199,8 @@ _register_family(Scenario(name="fig3_cifar", dataset="cifar",
 # these run even where the slab/reference paths would exhaust memory).
 # Deliberately tiny on every axis that is not U: the point is the OTA
 # hop at U = C*M users, not convergence.
-SCALE_FAMILIES = ("scale_u256", "scale_u1024", "scale_u4096")
+SCALE_FAMILIES = ("scale_u256", "scale_u1024", "scale_u4096",
+                  "scale_u16384")
 
 for _U, _C, _M in ((256, 4, 64), (1024, 8, 128), (4096, 16, 256)):
     register_scenario(Scenario(
@@ -208,3 +209,14 @@ for _U, _C, _M in ((256, 4, 64), (1024, 8, 128), (4096, 16, 256)):
         ota_backend="fused", C=_C, M=_M, K=16, K_ps=16, sigma_z2=1.0,
         total_IT=2, lr=5e-2, opt="sgd", n_train=4 * _U, n_test=512,
         eval_every=1))
+
+# The first sharded-only tier: 16384 users' local training vmapped on
+# one device exhausts host memory / wall clock, but sharded over a
+# (cluster, user) mesh (`--exec sharded --mesh 2x4`) each shard trains
+# U / 8 users and the fused hop sees only its rx x symbol tile.
+register_scenario(Scenario(
+    name="scale_u16384", dataset="mnist", partition="iid",
+    tau=1, I=1, batch=8, mode="whfl", ota_mode="faithful",
+    ota_backend="fused", C=16, M=1024, K=4, K_ps=4, sigma_z2=1.0,
+    total_IT=1, lr=5e-2, opt="sgd", n_train=2 * 16384, n_test=128,
+    eval_every=1))

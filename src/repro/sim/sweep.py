@@ -14,6 +14,12 @@ trace, so scenarios are looped; homogeneous seeds are vmapped.
     PYTHONPATH=src python -m repro.sim.sweep \
         --scenarios fig2_iid,fig2_noniid --seeds 5 --out results/sweep.json
 
+`--exec sharded --mesh 2x4` swaps the single-device round for the
+mesh-sharded engine (`repro.exec.ShardedSweepRunner` — shard_map over
+a (cluster, user) device mesh, bitwise invariant to the mesh shape);
+`--bench-out` additionally writes the ``BENCH_sweep.json`` throughput
+trajectory (rounds/sec per scenario + engine metadata).
+
 Output is a structured JSON document (`SCHEMA_VERSION`), and
 `csv_lines` renders the benchmark-suite CSV convention
 (``name,us_per_call,derived``) from the same records.
@@ -39,10 +45,11 @@ from repro.optim import adam, sgd
 from repro.sim.scenario import Scenario, get_scenario, list_scenarios
 
 SCHEMA_VERSION = "repro.sim.sweep/v1"
+BENCH_SCHEMA_VERSION = "repro.bench.sweep/v1"
 
 # Every per-scenario record carries exactly these keys (tests pin them).
 RECORD_KEYS = ("scenario", "seeds", "rounds", "metrics", "final",
-               "n_traces", "seconds")
+               "n_traces", "seconds", "exec")
 METRIC_KEYS = ("acc", "loss", "edge_power", "is_power")
 
 
@@ -58,6 +65,7 @@ class SweepResult:
     is_power: List[List[float]]
     n_traces: int                     # jit traces of the round function
     seconds: float
+    exec_info: Dict = field(default_factory=dict)
     final_state: Optional[dict] = field(default=None, repr=False)
 
     def to_record(self) -> Dict:
@@ -78,6 +86,7 @@ class SweepResult:
             "final": fin,
             "n_traces": self.n_traces,
             "seconds": self.seconds,
+            "exec": dict(self.exec_info),
         }
 
 
@@ -114,6 +123,31 @@ class SweepRunner:
             raise ValueError(f"batch must be 'vmap' or 'map', got {batch!r}")
         self.batch = batch
 
+    # -- engine hooks (overridden by repro.exec.ShardedSweepRunner) ---------
+
+    def _build_round(self, sc: Scenario, loss_fn, opt, topo, cfg, spec,
+                     X, Y, counter):
+        """Build the seed-batched round executor
+        ``(states, keys, P_t, P_is_t) -> states`` for one scenario."""
+        round_fn = make_round_fn(loss_fn, opt, topo, cfg, spec, X, Y,
+                                 trace_counter=counter)
+        return self._batch_round(round_fn)
+
+    def _batch_round(self, round_fn):
+        """Lift a per-seed round over the stacked seed axis — one
+        trace/compile either way (see class doc for vmap vs map)."""
+        if self.batch == "vmap":
+            return jax.jit(jax.vmap(round_fn, in_axes=(0, 0, None, None)))
+        return jax.jit(lambda st, ks, P, P_is: jax.lax.map(
+            lambda a: round_fn(a[0], a[1], P, P_is), (st, ks)))
+
+    def _exec_info(self) -> Dict:
+        """Execution-engine metadata recorded with every result.
+        `device_count` is the number of devices the engine *uses* (not
+        how many are visible): always 1 for the single-device engine."""
+        return {"name": "single", "mesh": None,
+                "device_count": 1, "batch": self.batch}
+
     # -- one scenario, all seeds at once ------------------------------------
 
     def run_scenario(self, sc: Scenario) -> SweepResult:
@@ -130,18 +164,12 @@ class SweepRunner:
                   for s in self.seeds]
         spec = agg.make_flat_spec(params[0])
         counter = [0]
-        round_fn = make_round_fn(loss_fn, opt, topo, cfg, spec, X, Y,
-                                 trace_counter=counter)
+        round_b = self._build_round(sc, loss_fn, opt, topo, cfg, spec, X, Y,
+                                    counter)
         states = [init_round_state(p, opt, topo.C, topo.M) for p in params]
         state = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
         keys = jnp.stack([jax.random.PRNGKey(s + 1) for s in self.seeds])
 
-        if self.batch == "vmap":
-            round_b = jax.jit(jax.vmap(round_fn,
-                                       in_axes=(0, 0, None, None)))
-        else:
-            round_b = jax.jit(lambda st, ks, P, P_is: jax.lax.map(
-                lambda a: round_fn(a[0], a[1], P, P_is), (st, ks)))
         split_b = jax.jit(jax.vmap(jax.random.split))
 
         xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
@@ -192,6 +220,7 @@ class SweepRunner:
             scenario=sc, seeds=self.seeds, rounds=rounds, acc=acc_t,
             loss=loss_t, edge_power=pe_t, is_power=pi_t,
             n_traces=counter[0], seconds=time.time() - t0,
+            exec_info=self._exec_info(),
             final_state=state if self.keep_state else None)
 
     # -- the sweep -----------------------------------------------------------
@@ -207,6 +236,26 @@ def sweep_to_json(results: Sequence[SweepResult],
         "quick": quick,
         "scenarios": [r.to_record() for r in results],
     }
+
+
+def bench_doc(results: Sequence[SweepResult]) -> Dict:
+    """``BENCH_sweep.json``: the throughput trajectory (rounds/sec per
+    scenario, with the execution-engine metadata that produced it)."""
+    records = []
+    for r in results:
+        rounds = r.rounds[-1] if r.rounds else 0
+        records.append({
+            "scenario": r.scenario.name,
+            "seeds": len(r.seeds),
+            "rounds": rounds,
+            "seconds": r.seconds,
+            "rounds_per_sec": (rounds / r.seconds) if r.seconds > 0 else 0.0,
+            "exec": dict(r.exec_info),
+        })
+    return {"schema": BENCH_SCHEMA_VERSION,
+            "jax_backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "records": records}
 
 
 def csv_lines(doc: Dict, prefix: str = "sweep") -> List[str]:
@@ -239,7 +288,20 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
     ap.add_argument("--batch", default="vmap", choices=["vmap", "map"],
                     help="seed-axis execution: vmap (fastest) or map "
                          "(bitwise-reproducible per seed)")
+    ap.add_argument("--exec", default="single", dest="exec_name",
+                    choices=["single", "sharded"],
+                    help="execution engine: single (one device) or sharded "
+                         "(shard_map over a --mesh device mesh; bitwise "
+                         "mesh-invariant, forces --batch map)")
+    ap.add_argument("--mesh", default="1x1",
+                    help="device mesh CxU for --exec sharded, e.g. 2x4 "
+                         "(clusters x users-per-cluster shards); on CPU "
+                         "force host devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--out", default=None, help="write JSON document here")
+    ap.add_argument("--bench-out", default=None,
+                    help="write the BENCH_sweep.json throughput document "
+                         "(rounds/sec per scenario) here")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     args = ap.parse_args(argv)
@@ -255,11 +317,15 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
     seeds = ([int(s) for s in args.seed_list.split(",")]
              if args.seed_list else args.seeds)
     try:
-        runner = SweepRunner(args.scenarios.split(","), seeds=seeds,
-                             quick=args.quick, batch=args.batch)
-    except KeyError as e:
+        # lazy import: repro.exec builds on this module
+        from repro.exec import make_runner
+        runner = make_runner(args.exec_name, args.scenarios.split(","),
+                             seeds=seeds, quick=args.quick,
+                             batch=args.batch, mesh=args.mesh)
+    except (KeyError, ValueError) as e:
         ap.error(str(e.args[0] if e.args else e))
-    doc = sweep_to_json(runner.run(), quick=args.quick)
+    results = runner.run()
+    doc = sweep_to_json(results, quick=args.quick)
     for line in csv_lines(doc):
         print(line)
     if args.out:
@@ -267,6 +333,11 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
         with open(args.out, "w") as f:
             json.dump(doc, f, indent=1)
         print("wrote", args.out)
+    if args.bench_out:
+        os.makedirs(os.path.dirname(args.bench_out) or ".", exist_ok=True)
+        with open(args.bench_out, "w") as f:
+            json.dump(bench_doc(results), f, indent=1)
+        print("wrote", args.bench_out)
     return doc
 
 
