@@ -1,0 +1,215 @@
+"""Perf-trajectory gate: compare fresh ``BENCH_sweep.json`` documents
+against the committed CPU reference (``results/BENCH_baseline.json``).
+
+Two checks, both over ``rounds_per_sec`` (computed from the driving
+loop's wall time — run the sweeps with ``--warmup`` so compile time is
+excluded and the numbers are comparable across runs):
+
+- **regression**: every fresh record whose (scenario, exec engine,
+  driver, mesh) key appears in the baseline must reach at least
+  ``baseline / max_regression`` rounds/sec (default 2x slack, absorbing
+  runner-hardware variance while still catching order-of-magnitude
+  dispatch regressions);
+- **speedup** (``--expect-speedup NAME:RATIO``): within the fresh
+  documents, the chunked-driver record for scenario NAME must be at
+  least RATIO times the stepwise record's rounds/sec;
+- **dispatch ratio** (``--expect-dispatch-ratio NAME:RATIO``): the
+  stepwise record must issue at least RATIO times more host dispatches
+  than the chunked record — the driver's structural win, independent
+  of hardware.
+
+Gate calibration (measured on the 2-core CPU reference box, warm):
+XLA:CPU dispatch costs ~0.07 ms against ~40 ms rounds, so eliminating
+per-round dispatch buys only ~1.05-1.3x rounds/sec there — CI gates
+the speedup at >= 1.0x (chunked must never be slower) plus a >= 4x
+dispatch reduction.  The 1.5x+ wall-clock target belongs to real
+accelerators, where dispatch latency and host-device sync dominate
+sub-ms rounds (see ROADMAP "Round drivers on real TPU").
+
+    python -m benchmarks.bench_check results/BENCH_sweep.json \
+        --baseline results/BENCH_baseline.json --max-regression 2 \
+        --expect-speedup scale_u256_bench:1.0 \
+        --expect-dispatch-ratio scale_u256_bench:4
+
+Exit code 0 = all gates pass; 1 = any gate failed (CI fails the job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+BASELINE_SCHEMA = "repro.bench.baseline/v1"
+
+
+def _key(rec: Dict) -> Tuple:
+    ex = rec.get("exec", {})
+    return (rec["scenario"], ex.get("name"),
+            rec.get("driver", ex.get("driver", "stepwise")),
+            ex.get("mesh"))
+
+
+def _records(doc: Dict) -> List[Dict]:
+    """Sweep records of either a BENCH_sweep or a baseline document."""
+    if doc.get("schema") == BASELINE_SCHEMA:
+        return doc.get("sweep", {}).get("records", [])
+    return doc.get("records", [])
+
+
+def check_regression(fresh: List[Dict], baseline: List[Dict],
+                     max_regression: float) -> List[str]:
+    base = {_key(r): r for r in baseline}
+    errors, matched = [], set()
+    for rec in fresh:
+        ref = base.get(_key(rec))
+        if ref is None:
+            print(f"  [skip] {_key(rec)}: no baseline record")
+            continue
+        matched.add(_key(rec))
+        rps, ref_rps = rec["rounds_per_sec"], ref["rounds_per_sec"]
+        floor = ref_rps / max_regression
+        status = "ok" if rps >= floor else "FAIL"
+        print(f"  [{status}] {_key(rec)}: {rps:.2f} rounds/s "
+              f"(baseline {ref_rps:.2f}, floor {floor:.2f})")
+        if rps < floor:
+            errors.append(
+                f"{_key(rec)}: {rps:.2f} rounds/s is >{max_regression}x "
+                f"below the baseline {ref_rps:.2f}")
+    for k in sorted(base.keys() - matched, key=str):
+        print(f"  [unmatched baseline] {k}")
+    if fresh and not matched:
+        # key drift (scenario/mesh/driver naming) must not silently
+        # turn the gate into a no-op
+        errors.append("regression gate matched NO fresh record against "
+                      "the baseline — record keys have drifted; "
+                      "regenerate results/BENCH_baseline.json or fix "
+                      "the sweep invocation")
+    return errors
+
+
+def _driver_pair(fresh: List[Dict], scenario: str, gate: str):
+    """The scenario's unique (stepwise, chunked) record pair, or an
+    error list.  One record per driver is required — records from
+    different engines/meshes must not silently shadow each other."""
+    by_driver: Dict[str, List[Dict]] = {}
+    for rec in fresh:
+        if rec["scenario"] == scenario:
+            drv = rec.get("driver", rec.get("exec", {}).get("driver"))
+            by_driver.setdefault(drv, []).append(rec)
+    missing = [d for d in ("stepwise", "chunked") if d not in by_driver]
+    if missing:
+        return None, [f"{gate} gate for {scenario!r} needs both a "
+                      f"stepwise and a chunked record; have "
+                      f"{sorted(by_driver)}"]
+    dupes = {d: [_key(r) for r in rs] for d, rs in by_driver.items()
+             if len(rs) > 1}
+    if dupes:
+        return None, [f"{gate} gate for {scenario!r} is ambiguous — "
+                      f"multiple records per driver: {dupes}"]
+    return (by_driver["stepwise"][0], by_driver["chunked"][0]), []
+
+
+def check_speedup(fresh: List[Dict], scenario: str,
+                  ratio: float) -> List[str]:
+    pair, errors = _driver_pair(fresh, scenario, "speedup")
+    if errors:
+        return errors
+    step, chunk = pair
+    if step["rounds_per_sec"] <= 0:
+        return [f"{scenario}: stepwise record has no valid "
+                f"rounds_per_sec ({step['rounds_per_sec']}); cannot "
+                f"gate the speedup"]
+    got = chunk["rounds_per_sec"] / step["rounds_per_sec"]
+    status = "ok" if got >= ratio else "FAIL"
+    print(f"  [{status}] {scenario}: chunked {chunk['rounds_per_sec']:.2f} "
+          f"vs stepwise {step['rounds_per_sec']:.2f} rounds/s "
+          f"-> {got:.2f}x (need >= {ratio}x; "
+          f"dispatches {chunk.get('dispatches')} vs "
+          f"{step.get('dispatches')})")
+    if got < ratio:
+        return [f"{scenario}: chunked/stepwise speedup {got:.2f}x "
+                f"< required {ratio}x"]
+    return []
+
+
+def check_dispatch_ratio(fresh: List[Dict], scenario: str,
+                         ratio: float) -> List[str]:
+    pair, errors = _driver_pair(fresh, scenario, "dispatch")
+    if errors:
+        return errors
+    sd = pair[0].get("dispatches")
+    cd = pair[1].get("dispatches")
+    if not sd or not cd:  # missing/None/0 is unmeasured, never a pass
+        return [f"{scenario}: dispatch counts missing from the records "
+                f"(stepwise={sd!r}, chunked={cd!r}); cannot gate the "
+                f"dispatch reduction"]
+    got = sd / cd
+    status = "ok" if got >= ratio else "FAIL"
+    print(f"  [{status}] {scenario}: {sd} stepwise vs {cd} chunked "
+          f"dispatches -> {got:.1f}x reduction (need >= {ratio}x)")
+    if got < ratio:
+        return [f"{scenario}: dispatch reduction {got:.1f}x "
+                f"< required {ratio}x"]
+    return []
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Gate BENCH_sweep.json against the committed baseline")
+    ap.add_argument("fresh", nargs="+",
+                    help="fresh BENCH_sweep.json document(s)")
+    ap.add_argument("--baseline", default="results/BENCH_baseline.json")
+    ap.add_argument("--max-regression", type=float, default=2.0,
+                    help="fail when rounds/sec drops more than this "
+                         "factor below the baseline record")
+    ap.add_argument("--expect-speedup", action="append", default=[],
+                    metavar="SCENARIO:RATIO",
+                    help="require the chunked record of SCENARIO to be "
+                         ">= RATIO x the stepwise record (repeatable)")
+    ap.add_argument("--expect-dispatch-ratio", action="append", default=[],
+                    metavar="SCENARIO:RATIO",
+                    help="require the stepwise record of SCENARIO to "
+                         "issue >= RATIO x the chunked record's host "
+                         "dispatches (repeatable)")
+    args = ap.parse_args(argv)
+
+    fresh: List[Dict] = []
+    for path in args.fresh:
+        with open(path) as f:
+            fresh.extend(_records(json.load(f)))
+    with open(args.baseline) as f:
+        baseline = _records(json.load(f))
+
+    def parse_spec(spec: str) -> Tuple[str, float]:
+        name, sep, ratio = spec.rpartition(":")
+        try:
+            if not sep or not name:
+                raise ValueError
+            return name, float(ratio)
+        except ValueError:
+            ap.error(f"expected SCENARIO:RATIO, got {spec!r}")
+
+    errors = []
+    print(f"regression gate (max {args.max_regression}x below baseline):")
+    errors += check_regression(fresh, baseline, args.max_regression)
+    for spec in args.expect_speedup:
+        name, ratio = parse_spec(spec)
+        print(f"speedup gate ({spec}):")
+        errors += check_speedup(fresh, name, ratio)
+    for spec in args.expect_dispatch_ratio:
+        name, ratio = parse_spec(spec)
+        print(f"dispatch gate ({spec}):")
+        errors += check_dispatch_ratio(fresh, name, ratio)
+
+    if errors:
+        print("\nFAILED:", file=sys.stderr)
+        for e in errors:
+            print(" -", e, file=sys.stderr)
+        return 1
+    print("all bench gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -51,6 +51,12 @@ def main():
     ap.add_argument("--mesh", default="1x1",
                     help="CxU device mesh for --exec sharded (axes must "
                          "divide --C and --M), e.g. 4x1")
+    ap.add_argument("--driver", default="stepwise",
+                    choices=["stepwise", "chunked"],
+                    help="round driver: stepwise (one dispatch per "
+                         "round) or chunked (device-resident lax.scan "
+                         "per eval window; bitwise == stepwise under "
+                         "the map batch mode)")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
@@ -69,7 +75,8 @@ def main():
 
     seeds = list(range(args.seed, args.seed + args.seeds))
     runner = make_runner(args.exec_name, [sc for _, sc in named],
-                         seeds=seeds, quick=args.quick, mesh=args.mesh)
+                         seeds=seeds, quick=args.quick, mesh=args.mesh,
+                         driver=args.driver)
     results = runner.run()
 
     out_doc = sweep_to_json(results, quick=args.quick)

@@ -118,8 +118,21 @@ def uniform_topology(
 def power_schedule(t, base: float = 1.0, slope: float = 1e-2,
                    is_factor: float = 20.0, low: bool = False):
     """Paper §V: P_t = 1 + 1e-2 t, P_IS,t = 20 P_t; P_t,low = 0.5 P_t for
-    the I=1 runs (consistent average power)."""
+    the I=1 runs (consistent average power).
+
+    `t` may be a scalar round index or a ``[T]`` array of indices — one
+    implementation evaluates both, elementwise in float64, so the
+    vectorized schedule consumed by the chunked round driver is
+    bit-identical to the scalar per-round values the stepwise driver
+    computes (including after the float32 cast at the jit boundary).
+    Scalars return Python floats (as before); arrays return float64
+    numpy arrays.
+    """
+    t = np.asarray(t, np.float64)
     P = base + slope * t
     if low:
         P = 0.5 * P
-    return P, is_factor * P
+    P_is = is_factor * P
+    if t.ndim == 0:
+        return float(P), float(P_is)
+    return P, P_is

@@ -181,6 +181,73 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
     return round_fn
 
 
+def eval_windows(T: int, eval_every: int) -> list:
+    """Partition ``T`` rounds into the stepwise driver's eval windows.
+
+    The stepwise driver evaluates after round ``t`` whenever
+    ``t % eval_every == 0 or t == T - 1``; the returned list holds the
+    number of rounds between consecutive eval points (summing to T), so
+    a chunked driver that scans one window per entry evaluates at
+    exactly the stepwise rounds.  A non-divisible tail
+    (``T % eval_every != 0``) simply yields a shorter final window —
+    at most three distinct lengths ever occur (1, eval_every, tail),
+    which bounds the number of chunk compilations.
+    """
+    e = max(1, int(eval_every))
+    out, prev = [], -1
+    for t in range(T):
+        if t % e == 0 or t == T - 1:
+            out.append(t - prev)
+            prev = t
+    return out
+
+
+def make_chunk_fn(round_fn: Callable, eval_fn: Optional[Callable] = None,
+                  split_fn: Optional[Callable] = None) -> Callable:
+    """Lift a pure round executor into a device-resident multi-round
+    chunk: ``chunk_fn(state, keys, P_win, P_is_win) -> (state, keys,
+    metrics)`` runs ``len(P_win)`` rounds in ONE ``lax.scan`` dispatch.
+
+    `round_fn` may be per-seed (``(state, key, P, P_is) -> state``) or
+    already seed-batched (e.g. ``lax.map``/``vmap`` over a stacked seed
+    axis); `split_fn` must match — the default `jax.random.split` for
+    a single ``[2]`` key, ``jax.vmap(jax.random.split)`` for stacked
+    ``[S, 2]`` keys.  The scan body reproduces the stepwise driver's
+    per-round computation exactly: split the carried key(s) into
+    ``(next_key, sub)`` (threefry is integer-exact under any batching)
+    and apply `round_fn` to the sub-key with that round's precomputed
+    power values (``P_win``/``P_is_win``, from
+    `repro.core.topology.power_schedule` on a ``[T]`` index array).
+
+    Bitwise note (pinned by `tests/test_driver.py`): the scan must sit
+    *outside* the seed batching — scanning a per-seed round inside a
+    ``lax.map`` slice lets XLA:CPU fuse across the round boundary and
+    drift by ~1 ULP, whereas a scan whose body IS the stepwise batched
+    program (split + ``lax.map``'d round) reproduces it bitwise.  Pass
+    the batched round + batched split here and lift nothing afterwards.
+
+    `eval_fn(state) -> metrics` (optional, same batching level as
+    `round_fn`) folds the eval into the same compiled program, emitted
+    once per window; the host loop becomes one dispatch per eval window
+    instead of 2-3 dispatches per round.
+    """
+    split_fn = jax.random.split if split_fn is None else split_fn
+
+    def chunk_fn(state, keys, P_win, P_is_win):
+        def body(carry, Ps):
+            st, ks = carry
+            s2 = split_fn(ks)          # [..., 2, 2]: (next_key, sub)
+            st = round_fn(st, s2[..., 1, :], Ps[0], Ps[1])
+            return (st, s2[..., 0, :]), None
+
+        (state, keys), _ = jax.lax.scan(body, (state, keys),
+                                        (P_win, P_is_win))
+        metrics = eval_fn(state) if eval_fn is not None else None
+        return state, keys, metrics
+
+    return chunk_fn
+
+
 class WHFLTrainer:
     """loss_fn(params, xb, yb, rng) -> scalar; data X/Y: [C, M, n, ...].
 

@@ -24,10 +24,10 @@ from typing import Sequence, Union
 from repro.exec.mesh import (MESH_AXES, host_device_recipe,
                              make_device_mesh, parse_mesh,
                              validate_mesh_for)
-from repro.exec.round import make_sharded_round_fn
+from repro.exec.round import make_sharded_chunk_fn, make_sharded_round_fn
 from repro.exec.runner import ShardedSweepRunner
 from repro.sim.scenario import Scenario
-from repro.sim.sweep import SweepRunner
+from repro.sim.sweep import DRIVERS, SweepRunner
 
 ENGINES = ("single", "sharded")
 
@@ -35,19 +35,23 @@ ENGINES = ("single", "sharded")
 def make_runner(exec_name: str, scenarios: Sequence[Union[str, Scenario]],
                 *, seeds=1, quick: bool = False, batch: str = "vmap",
                 mesh: Union[str, tuple] = "1x1",
-                keep_state: bool = False) -> SweepRunner:
+                keep_state: bool = False, driver: str = "stepwise",
+                warmup: bool = False) -> SweepRunner:
     """Engine factory behind the ``--exec`` CLI flag."""
     if exec_name == "single":
         return SweepRunner(scenarios, seeds=seeds, quick=quick,
-                           keep_state=keep_state, batch=batch)
+                           keep_state=keep_state, batch=batch,
+                           driver=driver, warmup=warmup)
     if exec_name == "sharded":
         return ShardedSweepRunner(scenarios, seeds=seeds, quick=quick,
-                                  keep_state=keep_state, mesh=mesh)
+                                  keep_state=keep_state, mesh=mesh,
+                                  driver=driver, warmup=warmup)
     raise ValueError(
         f"unknown execution engine {exec_name!r}; known: "
         f"{', '.join(ENGINES)}")
 
 
-__all__ = ["ENGINES", "MESH_AXES", "ShardedSweepRunner", "SweepRunner",
-           "host_device_recipe", "make_device_mesh", "make_runner",
-           "make_sharded_round_fn", "parse_mesh", "validate_mesh_for"]
+__all__ = ["DRIVERS", "ENGINES", "MESH_AXES", "ShardedSweepRunner",
+           "SweepRunner", "host_device_recipe", "make_device_mesh",
+           "make_runner", "make_sharded_chunk_fn", "make_sharded_round_fn",
+           "parse_mesh", "validate_mesh_for"]

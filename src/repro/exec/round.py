@@ -54,17 +54,15 @@ from repro.optim import Optimizer, apply_updates
 from repro.sharding import shard_map
 
 
-def make_sharded_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
-                          cfg: WHFLConfig, spec: agg.FlatSpec, X, Y, mesh,
-                          trace_counter: Optional[list] = None) -> Callable:
-    """Build ``round_fn(state, key, P_t, P_is_t) -> state`` running one
-    W-HFL round sharded over `mesh` (axes ``("cluster", "user")``).
-
-    Same contract as `repro.core.whfl.make_round_fn` — pure, jit-able,
-    seed-batchable — plus the mesh-invariance guarantee: for a fixed
-    scenario and seed, the returned state is bitwise identical for
-    every mesh shape that divides (C, M), including ``1x1``
-    (`tests/test_exec_sharded.py` pins this).
+def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
+                       cfg: WHFLConfig, spec: agg.FlatSpec, X, Y, mesh,
+                       trace_counter: Optional[list] = None):
+    """Construct the per-shard round body shared by both sharded entry
+    points: `make_sharded_round_fn` (one shard_map per round) and
+    `make_sharded_chunk_fn` (a lax.scan of the same body *inside* one
+    shard_map per eval window).  Returns ``(_round, state_spec, X, Y)``
+    where `_round(state, key, P_t, P_is_t, X_loc, Y_loc)` is valid only
+    inside a shard_map over ``("cluster", "user")``.
     """
     C, M = topo.C, topo.M
     C_loc, M_loc = validate_mesh_for(mesh, C, M)
@@ -239,6 +237,24 @@ def make_sharded_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
         "power_edge": P(), "power_is": P(), "n_edge_tx": P(),
         "n_is_tx": P(),
     }
+    return _round, state_spec, X, Y
+
+
+def make_sharded_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
+                          cfg: WHFLConfig, spec: agg.FlatSpec, X, Y, mesh,
+                          trace_counter: Optional[list] = None) -> Callable:
+    """Build ``round_fn(state, key, P_t, P_is_t) -> state`` running one
+    W-HFL round sharded over `mesh` (axes ``("cluster", "user")``).
+
+    Same contract as `repro.core.whfl.make_round_fn` — pure, jit-able,
+    seed-batchable — plus the mesh-invariance guarantee: for a fixed
+    scenario and seed, the returned state is bitwise identical for
+    every mesh shape that divides (C, M), including ``1x1``
+    (`tests/test_exec_sharded.py` pins this).
+    """
+    _round, state_spec, X, Y = _build_round_parts(
+        loss_fn, opt, topo, cfg, spec, X, Y, mesh,
+        trace_counter=trace_counter)
     sharded = shard_map(
         _round, mesh=mesh,
         in_specs=(state_spec, P(), P(), P(),
@@ -250,3 +266,52 @@ def make_sharded_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
                        X, Y)
 
     return round_fn
+
+
+def make_sharded_chunk_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
+                          cfg: WHFLConfig, spec: agg.FlatSpec, X, Y, mesh,
+                          eval_fn: Optional[Callable] = None,
+                          trace_counter: Optional[list] = None) -> Callable:
+    """Build ``chunk_fn(state, key, P_win, P_is_win) -> (state, key,
+    metrics)`` running ``len(P_win)`` sharded W-HFL rounds in a single
+    `lax.scan` *inside* one shard_map — the sharded-engine counterpart
+    of `repro.core.whfl.make_chunk_fn`, so the host stops paying a
+    shard_map re-entry + dispatch barrier per round.
+
+    The scan body is exactly the `_round` body the per-round entry
+    point runs (same key chain as the stepwise driver: ``key, sub =
+    split(key)`` per round — threefry is integer-exact and replicated
+    identically on every shard), so chunked sharded sweeps are bitwise
+    equal to stepwise sharded sweeps AND retain the engine's bitwise
+    mesh-invariance.  `eval_fn(state)` (optional) is folded into the
+    same jitted program on the replicated post-window state.
+    """
+    _round, state_spec, X, Y = _build_round_parts(
+        loss_fn, opt, topo, cfg, spec, X, Y, mesh,
+        trace_counter=trace_counter)
+
+    def _chunk(state, key, P_win, P_is_win, X_loc, Y_loc):
+        def body(carry, Ps):
+            st, k = carry
+            ks = jax.random.split(k)
+            st = _round(st, ks[1], Ps[0], Ps[1], X_loc, Y_loc)
+            return (st, ks[0]), None
+
+        (state, key), _ = jax.lax.scan(body, (state, key),
+                                       (P_win, P_is_win))
+        return state, key
+
+    sharded = shard_map(
+        _chunk, mesh=mesh,
+        in_specs=(state_spec, P(), P(), P(),
+                  P("cluster", "user"), P("cluster", "user")),
+        out_specs=(state_spec, P()), check_vma=False)
+
+    def chunk_fn(state, key, P_win, P_is_win):
+        state, key = sharded(state, key,
+                             jnp.asarray(P_win, jnp.float32),
+                             jnp.asarray(P_is_win, jnp.float32), X, Y)
+        metrics = eval_fn(state) if eval_fn is not None else None
+        return state, key, metrics
+
+    return chunk_fn

@@ -17,8 +17,10 @@ from __future__ import annotations
 
 from typing import Dict, Sequence, Union
 
+import jax
+
 from repro.exec.mesh import make_device_mesh, parse_mesh
-from repro.exec.round import make_sharded_round_fn
+from repro.exec.round import make_sharded_chunk_fn, make_sharded_round_fn
 from repro.sim.scenario import Scenario
 from repro.sim.sweep import SweepRunner
 
@@ -31,14 +33,19 @@ class ShardedSweepRunner(SweepRunner):
     0); the symbol axis of the fused OTA hop is padded to split evenly.
     The seed axis always uses the ``map`` batch mode — the sharded
     engine's contract is bitwise reproducibility, which vmap's
-    batch-size-dependent lowering would break.
+    batch-size-dependent lowering would break.  Both round drivers are
+    supported: ``driver="chunked"`` scans the round body *inside* the
+    shard_map (`make_sharded_chunk_fn`), removing the per-round host
+    barrier while staying bitwise equal to stepwise.
     """
 
     def __init__(self, scenarios: Sequence[Union[str, Scenario]],
                  seeds=1, quick: bool = False, keep_state: bool = False,
-                 mesh: Union[str, tuple] = "1x1"):
+                 mesh: Union[str, tuple] = "1x1",
+                 driver: str = "stepwise", warmup: bool = False):
         super().__init__(scenarios, seeds=seeds, quick=quick,
-                         keep_state=keep_state, batch="map")
+                         keep_state=keep_state, batch="map",
+                         driver=driver, warmup=warmup)
         self.mesh_shape = parse_mesh(mesh)
         self.mesh = make_device_mesh(self.mesh_shape)
 
@@ -47,6 +54,23 @@ class ShardedSweepRunner(SweepRunner):
                                          X, Y, self.mesh,
                                          trace_counter=counter)
         return self._batch_round(round_fn)
+
+    def _build_chunk(self, sc, loss_fn, opt, topo, cfg, spec, X, Y, counter,
+                     eval_fn):
+        """Seed-batched sharded chunk: the round scan runs *inside* the
+        shard_map (`make_sharded_chunk_fn`); the per-seed chunk (incl.
+        the per-seed eval on the replicated post-window state) is then
+        lax.map'ed over seeds exactly like the stepwise sharded round,
+        and the carried (state, keys) buffers are donated."""
+        chunk_fn = make_sharded_chunk_fn(loss_fn, opt, topo, cfg, spec,
+                                         X, Y, self.mesh, eval_fn=eval_fn,
+                                         trace_counter=counter)
+
+        def batched(st, ks, P_win, P_is_win):
+            return jax.lax.map(
+                lambda a: chunk_fn(a[0], a[1], P_win, P_is_win), (st, ks))
+
+        return jax.jit(batched, donate_argnums=(0, 1))
 
     def _exec_info(self) -> Dict:
         mc, mu = self.mesh_shape

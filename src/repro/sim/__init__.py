@@ -14,7 +14,7 @@ from repro.sim.scenario import (FIG2_FAMILIES, SCENARIOS, Scenario,
                                 register_scenario)
 
 _SWEEP_EXPORTS = ("SweepRunner", "SweepResult", "sweep_to_json",
-                  "csv_lines", "SCHEMA_VERSION")
+                  "csv_lines", "bench_doc", "SCHEMA_VERSION", "DRIVERS")
 
 __all__ = [
     "Scenario", "SCENARIOS", "FIG2_FAMILIES", "get_scenario",

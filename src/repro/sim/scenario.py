@@ -199,8 +199,8 @@ _register_family(Scenario(name="fig3_cifar", dataset="cifar",
 # these run even where the slab/reference paths would exhaust memory).
 # Deliberately tiny on every axis that is not U: the point is the OTA
 # hop at U = C*M users, not convergence.
-SCALE_FAMILIES = ("scale_u256", "scale_u1024", "scale_u4096",
-                  "scale_u16384")
+SCALE_FAMILIES = ("scale_u256", "scale_u256_bench", "scale_u1024",
+                  "scale_u4096", "scale_u16384")
 
 for _U, _C, _M in ((256, 4, 64), (1024, 8, 128), (4096, 16, 256)):
     register_scenario(Scenario(
@@ -209,6 +209,19 @@ for _U, _C, _M in ((256, 4, 64), (1024, 8, 128), (4096, 16, 256)):
         ota_backend="fused", C=_C, M=_M, K=16, K_ps=16, sigma_z2=1.0,
         total_IT=2, lr=5e-2, opt="sgd", n_train=4 * _U, n_test=512,
         eval_every=1))
+
+# Driver-benchmark member of the scale family: U=256 users with the
+# closed-form `equivalent` backend and a T=48, eval_every=8 schedule —
+# per-round device work is small enough that per-round host dispatch is
+# a measurable fraction of wall clock, which is exactly what the
+# chunked round driver (--driver chunked) eliminates.  CI runs it with
+# both drivers and gates the chunked speedup (benchmarks/bench_check).
+register_scenario(Scenario(
+    name="scale_u256_bench", dataset="mnist", partition="iid",
+    tau=1, I=1, batch=8, mode="whfl", ota_mode="equivalent",
+    C=4, M=64, K=16, K_ps=16, sigma_z2=1.0,
+    total_IT=48, lr=5e-2, opt="sgd", n_train=1024, n_test=256,
+    eval_every=8))
 
 # The first sharded-only tier: 16384 users' local training vmapped on
 # one device exhausts host memory / wall clock, but sharded over a

@@ -17,8 +17,12 @@ trace, so scenarios are looped; homogeneous seeds are vmapped.
 `--exec sharded --mesh 2x4` swaps the single-device round for the
 mesh-sharded engine (`repro.exec.ShardedSweepRunner` — shard_map over
 a (cluster, user) device mesh, bitwise invariant to the mesh shape);
-`--bench-out` additionally writes the ``BENCH_sweep.json`` throughput
-trajectory (rounds/sec per scenario + engine metadata).
+`--driver chunked` swaps the per-round host loop for the
+device-resident chunked driver (`lax.scan` per eval window, donated
+carry buffers, async metric fetch — bitwise equal to stepwise under
+``--batch map``); `--bench-out` additionally writes the
+``BENCH_sweep.json`` throughput trajectory (rounds/sec per scenario +
+engine/driver metadata).
 
 Output is a structured JSON document (`SCHEMA_VERSION`), and
 `csv_lines` renders the benchmark-suite CSV convention
@@ -27,9 +31,11 @@ Output is a structured JSON document (`SCHEMA_VERSION`), and
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Union
 
@@ -39,13 +45,39 @@ import numpy as np
 
 from repro.core import aggregation as agg
 from repro.core.topology import power_schedule
-from repro.core.whfl import init_round_state, make_round_fn
+from repro.core.whfl import (eval_windows, init_round_state, make_chunk_fn,
+                             make_round_fn)
 from repro.nn.core import split_params
 from repro.optim import adam, sgd
 from repro.sim.scenario import Scenario, get_scenario, list_scenarios
 
+
+@contextlib.contextmanager
+def _silence_cpu_donation_warnings():
+    """CPU backends ignore `donate_argnums` (donation is a TPU/GPU
+    memory optimization) and warn once per chunk compilation; silence
+    exactly that message, scoped to the chunked drive, and ONLY on CPU
+    — on TPU/GPU an unusable-donation warning is the signal that the
+    memory optimization silently failed to apply, and must surface."""
+    with warnings.catch_warnings():
+        if jax.default_backend() == "cpu":
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+        yield
+
 SCHEMA_VERSION = "repro.sim.sweep/v1"
 BENCH_SCHEMA_VERSION = "repro.bench.sweep/v1"
+
+# Round drivers: how the host loop feeds rounds to the device.
+#   "stepwise" — one dispatch per round (+ key-split + eval dispatches),
+#     host recomputes the power schedule per round; the historical
+#     behaviour and the bitwise reference.
+#   "chunked"  — `repro.core.whfl.make_chunk_fn`: lax.scan over each
+#     eval window, precomputed [T] power schedule, eval folded into the
+#     scanned program, carried buffers donated, metrics fetched
+#     asynchronously (one device sync per scenario).  Bitwise identical
+#     to "stepwise" per round in the "map" batch mode.
+DRIVERS = ("stepwise", "chunked")
 
 # Every per-scenario record carries exactly these keys (tests pin them).
 RECORD_KEYS = ("scenario", "seeds", "rounds", "metrics", "final",
@@ -110,7 +142,8 @@ class SweepRunner:
     def __init__(self, scenarios: Sequence[Union[str, Scenario]],
                  seeds: Union[int, Sequence[int]] = 1,
                  quick: bool = False, keep_state: bool = False,
-                 batch: str = "vmap"):
+                 batch: str = "vmap", driver: str = "stepwise",
+                 warmup: bool = False):
         self.scenarios = [get_scenario(s) if isinstance(s, str) else s
                           for s in scenarios]
         if quick:
@@ -122,6 +155,15 @@ class SweepRunner:
         if batch not in ("vmap", "map"):
             raise ValueError(f"batch must be 'vmap' or 'map', got {batch!r}")
         self.batch = batch
+        if driver not in DRIVERS:
+            raise ValueError(f"driver must be one of {DRIVERS}, "
+                             f"got {driver!r}")
+        self.driver = driver
+        # warmup=True pre-executes every compiled program on throwaway
+        # copies before the timed driving loop, so `drive_seconds`
+        # (and BENCH_sweep rounds/sec) measure steady-state dispatch +
+        # execution, not trace/compile time.
+        self.warmup = warmup
 
     # -- engine hooks (overridden by repro.exec.ShardedSweepRunner) ---------
 
@@ -133,13 +175,45 @@ class SweepRunner:
                                  trace_counter=counter)
         return self._batch_round(round_fn)
 
+    def _batch_round_fn(self, round_fn):
+        """Seed-batched round executor, unjitted (see class doc for
+        vmap vs map) — reused as the scan body of the chunked driver,
+        where it must appear exactly as the stepwise program."""
+        if self.batch == "vmap":
+            return jax.vmap(round_fn, in_axes=(0, 0, None, None))
+        return lambda st, ks, P, P_is: jax.lax.map(
+            lambda a: round_fn(a[0], a[1], P, P_is), (st, ks))
+
     def _batch_round(self, round_fn):
         """Lift a per-seed round over the stacked seed axis — one
-        trace/compile either way (see class doc for vmap vs map)."""
+        trace/compile either way."""
+        return jax.jit(self._batch_round_fn(round_fn))
+
+    def _batch_eval_fn(self, eval_fn):
+        """Seed-batched per-state eval, unjitted; in map mode the
+        per-slice program is identical for every batch size (the same
+        bitwise property as `_batch_round_fn`)."""
         if self.batch == "vmap":
-            return jax.jit(jax.vmap(round_fn, in_axes=(0, 0, None, None)))
-        return jax.jit(lambda st, ks, P, P_is: jax.lax.map(
-            lambda a: round_fn(a[0], a[1], P, P_is), (st, ks)))
+            return jax.vmap(eval_fn)
+        return lambda state: jax.lax.map(eval_fn, state)
+
+    def _build_chunk(self, sc: Scenario, loss_fn, opt, topo, cfg, spec,
+                     X, Y, counter, eval_fn):
+        """Build the seed-batched chunk executor ``(states, keys, P_win,
+        P_is_win) -> (states, keys, metrics)`` for one scenario
+        (chunked driver).  The scan sits OUTSIDE the seed batching —
+        its body is the exact stepwise batched program (see
+        `make_chunk_fn` for why this is what keeps it bitwise) — and
+        the jit donates the carried (state, keys) buffers: for the
+        [S]-stacked states of the scale_u* scenarios the round state is
+        the dominant allocation, and donation lets XLA reuse it across
+        eval windows instead of holding two copies live."""
+        round_fn = make_round_fn(loss_fn, opt, topo, cfg, spec, X, Y,
+                                 trace_counter=counter)
+        chunk = make_chunk_fn(self._batch_round_fn(round_fn),
+                              self._batch_eval_fn(eval_fn),
+                              split_fn=jax.vmap(jax.random.split))
+        return jax.jit(chunk, donate_argnums=(0, 1))
 
     def _exec_info(self) -> Dict:
         """Execution-engine metadata recorded with every result.
@@ -164,13 +238,9 @@ class SweepRunner:
                   for s in self.seeds]
         spec = agg.make_flat_spec(params[0])
         counter = [0]
-        round_b = self._build_round(sc, loss_fn, opt, topo, cfg, spec, X, Y,
-                                    counter)
         states = [init_round_state(p, opt, topo.C, topo.M) for p in params]
         state = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
         keys = jnp.stack([jax.random.PRNGKey(s + 1) for s in self.seeds])
-
-        split_b = jax.jit(jax.vmap(jax.random.split))
 
         xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
 
@@ -183,11 +253,6 @@ class SweepRunner:
                                      -1))
             return acc, loss
 
-        if self.batch == "vmap":
-            eval_b = jax.jit(jax.vmap(_eval))
-        else:  # same per-slice program for every batch size (bitwise)
-            eval_b = jax.jit(lambda th: jax.lax.map(_eval, th))
-
         S, T = len(self.seeds), sc.rounds
         rounds: List[int] = []
         acc_t = [[] for _ in range(S)]
@@ -195,6 +260,56 @@ class SweepRunner:
         pe_t = [[] for _ in range(S)]
         pi_t = [[] for _ in range(S)]
 
+        def record(accs, losses, pe, pi):
+            for s in range(S):
+                acc_t[s].append(float(accs[s]))
+                loss_t[s].append(float(losses[s]))
+                pe_t[s].append(float(pe[s]))
+                pi_t[s].append(float(pi[s]))
+
+        if self.driver == "chunked":
+            state, dispatches, drive_s = self._drive_chunked(
+                sc, loss_fn, opt, topo, cfg, spec, X, Y, counter, _eval,
+                state, keys, T, rounds, record)
+        else:
+            state, dispatches, drive_s = self._drive_stepwise(
+                sc, loss_fn, opt, topo, cfg, spec, X, Y, counter, _eval,
+                state, keys, T, rounds, record)
+
+        exec_info = {**self._exec_info(), "driver": self.driver,
+                     "dispatches": dispatches, "drive_seconds": drive_s,
+                     "warmup": self.warmup}
+        return SweepResult(
+            scenario=sc, seeds=self.seeds, rounds=rounds, acc=acc_t,
+            loss=loss_t, edge_power=pe_t, is_power=pi_t,
+            n_traces=counter[0], seconds=time.time() - t0,
+            exec_info=exec_info,
+            final_state=state if self.keep_state else None)
+
+    # -- the stepwise driver: one dispatch per round ------------------------
+
+    def _drive_stepwise(self, sc, loss_fn, opt, topo, cfg, spec, X, Y,
+                        counter, _eval, state, keys, T, rounds, record):
+        round_b = self._build_round(sc, loss_fn, opt, topo, cfg, spec, X, Y,
+                                    counter)
+        split_b = jax.jit(jax.vmap(jax.random.split))
+        if self.batch == "vmap":
+            eval_b = jax.jit(jax.vmap(_eval))
+        else:  # same per-slice program for every batch size (bitwise)
+            eval_b = jax.jit(lambda th: jax.lax.map(_eval, th))
+
+        if self.warmup:  # compile + run every program on throwaway copies
+            P0, P_is0 = power_schedule(
+                0, cfg.power_base, cfg.power_slope, cfg.power_is_factor,
+                cfg.power_low)
+            ks = split_b(keys)
+            jax.block_until_ready(
+                (round_b(jax.tree.map(jnp.copy, state), ks[:, 1], P0,
+                         P_is0),
+                 eval_b(state["theta"])))
+
+        dispatches = 0
+        t_drive = time.time()
         for t in range(T):
             P_t, P_is_t = power_schedule(
                 t, cfg.power_base, cfg.power_slope, cfg.power_is_factor,
@@ -202,26 +317,68 @@ class SweepRunner:
             ks = split_b(keys)
             keys, subs = ks[:, 0], ks[:, 1]
             state = round_b(state, subs, P_t, P_is_t)
+            dispatches += 2
             if t % sc.eval_every == 0 or t == T - 1:
                 accs, losses = eval_b(state["theta"])
+                dispatches += 1
                 accs, losses = np.asarray(accs), np.asarray(losses)
                 pe = np.asarray(state["power_edge"]
                                 / jnp.maximum(state["n_edge_tx"], 1.0))
                 pi = np.asarray(state["power_is"]
                                 / jnp.maximum(state["n_is_tx"], 1.0))
                 rounds.append(t + 1)
-                for s in range(S):
-                    acc_t[s].append(float(accs[s]))
-                    loss_t[s].append(float(losses[s]))
-                    pe_t[s].append(float(pe[s]))
-                    pi_t[s].append(float(pi[s]))
+                record(accs, losses, pe, pi)
+        jax.block_until_ready(state)
+        return state, dispatches, time.time() - t_drive
 
-        return SweepResult(
-            scenario=sc, seeds=self.seeds, rounds=rounds, acc=acc_t,
-            loss=loss_t, edge_power=pe_t, is_power=pi_t,
-            n_traces=counter[0], seconds=time.time() - t0,
-            exec_info=self._exec_info(),
-            final_state=state if self.keep_state else None)
+    # -- the chunked driver: one dispatch per eval window -------------------
+
+    def _drive_chunked(self, sc, loss_fn, opt, topo, cfg, spec, X, Y,
+                       counter, _eval, state, keys, T, rounds, record):
+        """Device-resident multi-round driving: `lax.scan` over each
+        eval window (`repro.core.whfl.make_chunk_fn`), a precomputed
+        [T] power schedule, donated carry buffers, and asynchronous
+        metric fetch — every window is enqueued without a host sync,
+        and ONE `device_get` at the end transfers all metrics."""
+        def eval_state(st):   # per-seed metrics, folded into the chunk
+            acc, loss = _eval(st["theta"])
+            pe = st["power_edge"] / jnp.maximum(st["n_edge_tx"], 1.0)
+            pi = st["power_is"] / jnp.maximum(st["n_is_tx"], 1.0)
+            return acc, loss, pe, pi
+
+        chunk_b = self._build_chunk(sc, loss_fn, opt, topo, cfg, spec, X, Y,
+                                    counter, eval_state)
+        # the [T]-vectorized schedule is bit-identical (after the f32
+        # cast at the jit boundary) to the per-round scalars the
+        # stepwise driver feeds — see core.topology.power_schedule
+        P_all, P_is_all = power_schedule(
+            np.arange(T), cfg.power_base, cfg.power_slope,
+            cfg.power_is_factor, cfg.power_low)
+        P_all = P_all.astype(np.float32)
+        P_is_all = P_is_all.astype(np.float32)
+
+        windows = eval_windows(T, sc.eval_every)
+        with _silence_cpu_donation_warnings():
+            if self.warmup:  # compile + run each distinct window once
+                for w in sorted(set(windows)):
+                    jax.block_until_ready(chunk_b(
+                        jax.tree.map(jnp.copy, state), jnp.copy(keys),
+                        P_all[:w], P_is_all[:w]))
+
+            t_drive = time.time()
+            pending, off = [], 0
+            for w in windows:
+                state, keys, metrics = chunk_b(state, keys,
+                                               P_all[off:off + w],
+                                               P_is_all[off:off + w])
+                off += w
+                rounds.append(off)
+                pending.append(metrics)
+            # one sync: block on the last chunk, then transfer every
+            # window's metrics (all already resident on device)
+            for metrics in jax.device_get(pending):
+                record(*metrics)
+        return state, len(windows), time.time() - t_drive
 
     # -- the sweep -----------------------------------------------------------
 
@@ -240,16 +397,27 @@ def sweep_to_json(results: Sequence[SweepResult],
 
 def bench_doc(results: Sequence[SweepResult]) -> Dict:
     """``BENCH_sweep.json``: the throughput trajectory (rounds/sec per
-    scenario, with the execution-engine metadata that produced it)."""
+    scenario, with the execution-engine + round-driver metadata that
+    produced it).  ``rounds_per_sec`` is computed from the driving-loop
+    wall time (``drive_seconds``) so it measures dispatch + execution;
+    with ``warmup`` runs it excludes trace/compile too.  ``seconds``
+    stays the total scenario wall clock (setup + compile + drive)."""
     records = []
     for r in results:
         rounds = r.rounds[-1] if r.rounds else 0
+        ds = r.exec_info.get("drive_seconds")
+        # `is None`, not falsy: a legitimate 0.0 drive time must not
+        # silently fall back to the compile-inclusive total
+        drive_s = float(r.seconds if ds is None else ds)
         records.append({
             "scenario": r.scenario.name,
             "seeds": len(r.seeds),
             "rounds": rounds,
             "seconds": r.seconds,
-            "rounds_per_sec": (rounds / r.seconds) if r.seconds > 0 else 0.0,
+            "drive_seconds": drive_s,
+            "rounds_per_sec": (rounds / drive_s) if drive_s > 0 else 0.0,
+            "driver": r.exec_info.get("driver", "stepwise"),
+            "dispatches": r.exec_info.get("dispatches"),
             "exec": dict(r.exec_info),
         })
     return {"schema": BENCH_SCHEMA_VERSION,
@@ -288,6 +456,20 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
     ap.add_argument("--batch", default="vmap", choices=["vmap", "map"],
                     help="seed-axis execution: vmap (fastest) or map "
                          "(bitwise-reproducible per seed)")
+    ap.add_argument("--driver", default="stepwise",
+                    help="round driver(s), comma-separated subset of "
+                         "{stepwise, chunked}: stepwise = one dispatch "
+                         "per round; chunked = lax.scan per eval window "
+                         "(device-resident, donated buffers, async "
+                         "metric fetch; bitwise == stepwise under "
+                         "--batch map).  Listing both runs both and "
+                         "records each, e.g. for driver comparisons in "
+                         "--bench-out")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-compile + pre-run every program on "
+                         "throwaway copies so recorded rounds/sec "
+                         "measure steady-state dispatch+execution "
+                         "rather than compile time")
     ap.add_argument("--exec", default="single", dest="exec_name",
                     choices=["single", "sharded"],
                     help="execution engine: single (one device) or sharded "
@@ -316,15 +498,19 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
 
     seeds = ([int(s) for s in args.seed_list.split(",")]
              if args.seed_list else args.seeds)
-    try:
-        # lazy import: repro.exec builds on this module
-        from repro.exec import make_runner
-        runner = make_runner(args.exec_name, args.scenarios.split(","),
-                             seeds=seeds, quick=args.quick,
-                             batch=args.batch, mesh=args.mesh)
-    except (KeyError, ValueError) as e:
-        ap.error(str(e.args[0] if e.args else e))
-    results = runner.run()
+    results = []
+    for driver in args.driver.split(","):
+        try:
+            # lazy import: repro.exec builds on this module
+            from repro.exec import make_runner
+            runner = make_runner(args.exec_name, args.scenarios.split(","),
+                                 seeds=seeds, quick=args.quick,
+                                 batch=args.batch, mesh=args.mesh,
+                                 driver=driver.strip(),
+                                 warmup=args.warmup)
+        except (KeyError, ValueError) as e:
+            ap.error(str(e.args[0] if e.args else e))
+        results.extend(runner.run())
     doc = sweep_to_json(results, quick=args.quick)
     for line in csv_lines(doc):
         print(line)

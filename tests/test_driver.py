@@ -1,0 +1,179 @@
+"""Round-driver tests: the chunked (device-resident, lax.scan per eval
+window) driver vs the stepwise reference.
+
+The contract that makes the chunked driver usable everywhere is
+*bitwise identity*: under ``batch="map"`` a chunked sweep reproduces
+the stepwise sweep exactly — every recorded metric at every eval point
+and the full final state (params + optimizer moments + power
+accounting) — including when ``T % eval_every != 0`` leaves a short
+tail window.  Also pinned here: the vectorized ``[T]`` power schedule
+is bit-identical to the per-round scalar path, `eval_windows` matches
+the stepwise eval cadence, and the record schema carries the driver
+metadata.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.topology import power_schedule
+from repro.core.whfl import eval_windows
+from repro.sim import get_scenario, sweep_to_json
+from repro.sim.sweep import (DRIVERS, RECORD_KEYS, SweepRunner, bench_doc)
+
+SEEDS = [0, 1]
+
+
+def _tiny(T=8, eval_every=3, **kw):
+    """CI-sized fig2 variant; T=8, e=3 leaves a 1-round tail window
+    (evals at t = 0, 3, 6, 7)."""
+    sc = get_scenario("fig2_iid").quick().replace(total_IT=T,
+                                                  eval_every=eval_every)
+    return sc.replace(**kw) if kw else sc
+
+
+# ---------------------------------------------------------------------------
+# power schedule: one implementation, scalar and [T] paths bit-identical
+# ---------------------------------------------------------------------------
+
+def test_power_schedule_vectorized_bitwise_matches_scalar():
+    for low in (False, True):
+        P_vec, P_is_vec = power_schedule(np.arange(300), low=low)
+        assert P_vec.dtype == np.float64 and P_vec.shape == (300,)
+        for t in range(300):
+            P_t, P_is_t = power_schedule(t, low=low)
+            assert isinstance(P_t, float)  # scalar path API unchanged
+            # identical in float64...
+            assert P_t == P_vec[t] and P_is_t == P_is_vec[t], t
+            # ...and after the f32 cast at the jit boundary (what the
+            # drivers actually feed the round function)
+            assert np.float32(P_t) == P_vec.astype(np.float32)[t]
+            assert np.float32(P_is_t) == P_is_vec.astype(np.float32)[t]
+
+
+def test_power_schedule_custom_params_both_paths():
+    P, P_is = power_schedule(7, base=2.0, slope=0.5, is_factor=3.0)
+    Pv, P_isv = power_schedule(np.array([7]), base=2.0, slope=0.5,
+                               is_factor=3.0)
+    assert P == Pv[0] == 2.0 + 0.5 * 7
+    assert P_is == P_isv[0] == 3.0 * P
+
+
+# ---------------------------------------------------------------------------
+# eval windows partition
+# ---------------------------------------------------------------------------
+
+def test_eval_windows_match_stepwise_eval_points():
+    for T in (1, 2, 5, 8, 9, 48):
+        for e in (1, 2, 3, 8, 100):
+            wins = eval_windows(T, e)
+            assert sum(wins) == T
+            assert all(w >= 1 for w in wins)
+            # cumulative offsets == the stepwise driver's recorded rounds
+            evals = [t + 1 for t in range(T)
+                     if t % e == 0 or t == T - 1]
+            assert list(np.cumsum(wins)) == evals, (T, e)
+            # at most 3 distinct lengths -> bounded chunk compiles
+            assert len(set(wins)) <= 3
+
+
+def test_eval_windows_nondivisible_tail():
+    assert eval_windows(8, 3) == [1, 3, 3, 1]
+    assert eval_windows(48, 8) == [1, 8, 8, 8, 8, 8, 7]
+    assert eval_windows(4, 1) == [1, 1, 1, 1]
+    assert eval_windows(1, 5) == [1]
+
+
+# ---------------------------------------------------------------------------
+# chunked == stepwise, bitwise (map mode), incl. the tail window
+# ---------------------------------------------------------------------------
+
+def test_chunked_bitwise_matches_stepwise_map_mode_with_tail():
+    sc = _tiny(T=8, eval_every=3)  # T % eval_every != 0
+    step = SweepRunner([sc], seeds=SEEDS, batch="map",
+                       keep_state=True).run_scenario(sc)
+    chunk = SweepRunner([sc], seeds=SEEDS, batch="map", driver="chunked",
+                        keep_state=True).run_scenario(sc)
+    assert chunk.rounds == step.rounds == [1, 4, 7, 8]
+    # every recorded metric at every eval point is the identical float
+    assert chunk.acc == step.acc
+    assert chunk.loss == step.loss
+    assert chunk.edge_power == step.edge_power
+    assert chunk.is_power == step.is_power
+    # the full end state (params + optimizer moments + power sums)
+    eq = jax.tree.map(lambda a, b: bool(jnp.all(a == b)),
+                      step.final_state, chunk.final_state)
+    assert jax.tree.all(eq), eq
+    # one dispatch per eval window vs 2-3 dispatches per round
+    assert chunk.exec_info["dispatches"] == 4
+    assert step.exec_info["dispatches"] == 2 * 8 + 4
+    assert chunk.exec_info["driver"] == "chunked"
+    assert step.exec_info["driver"] == "stepwise"
+
+    # a chunked single-seed run equals its slice of the chunked batch
+    solo = SweepRunner([sc], seeds=[SEEDS[1]], batch="map",
+                       driver="chunked").run_scenario(sc)
+    assert solo.acc[0] == chunk.acc[1]
+    assert solo.edge_power[0] == chunk.edge_power[1]
+
+
+def test_chunked_warmup_does_not_perturb_results():
+    """warmup pre-runs each compiled program on throwaway copies; the
+    recorded trajectories must be bit-identical with and without it."""
+    sc = _tiny(T=4, eval_every=2)
+    cold = SweepRunner([sc], seeds=[0], batch="map",
+                       driver="chunked").run_scenario(sc)
+    warm = SweepRunner([sc], seeds=[0], batch="map", driver="chunked",
+                       warmup=True).run_scenario(sc)
+    assert cold.acc == warm.acc and cold.loss == warm.loss
+    assert cold.edge_power == warm.edge_power
+    assert warm.exec_info["warmup"] is True
+
+
+def test_chunked_vmap_mode_close_to_stepwise():
+    """vmap batching has no bitwise guarantee (batched lowering), but
+    the chunked driver must still agree to float tolerance."""
+    sc = _tiny(T=4, eval_every=2)
+    step = SweepRunner([sc], seeds=SEEDS, batch="vmap").run_scenario(sc)
+    chunk = SweepRunner([sc], seeds=SEEDS, batch="vmap",
+                        driver="chunked").run_scenario(sc)
+    np.testing.assert_allclose(step.acc, chunk.acc, atol=0.01)
+    np.testing.assert_allclose(step.loss, chunk.loss, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(step.edge_power, chunk.edge_power,
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# schema: records carry the driver metadata
+# ---------------------------------------------------------------------------
+
+def test_record_roundtrip_with_driver_field():
+    sc = _tiny(T=3, eval_every=2)
+    res = SweepRunner([sc], seeds=2, driver="chunked").run_scenario(sc)
+    rec = res.to_record()
+    assert tuple(sorted(rec)) == tuple(sorted(RECORD_KEYS))
+    for k in ("driver", "dispatches", "drive_seconds", "warmup"):
+        assert k in rec["exec"], k
+    assert rec["exec"]["driver"] == "chunked"
+    assert rec["exec"]["name"] == "single"
+    # document survives JSON round-trip with the new fields intact
+    doc = json.loads(json.dumps(sweep_to_json([res])))
+    assert doc["scenarios"][0]["exec"]["driver"] == "chunked"
+    # BENCH records surface driver + dispatch-overhead metadata
+    bdoc = bench_doc([res])
+    brec = bdoc["records"][0]
+    assert brec["driver"] == "chunked"
+    assert brec["dispatches"] == res.exec_info["dispatches"]
+    assert brec["drive_seconds"] > 0
+    assert brec["rounds_per_sec"] > 0
+
+
+def test_driver_validation():
+    assert DRIVERS == ("stepwise", "chunked")
+    with pytest.raises(ValueError, match="driver"):
+        SweepRunner(["fig2_iid"], driver="turbo")
+    from repro.exec import make_runner
+    r = make_runner("single", ["fig2_iid"], driver="chunked", warmup=True)
+    assert r.driver == "chunked" and r.warmup is True

@@ -118,8 +118,11 @@ def test_scale_u256_sharded_1x1_vs_2x4_bitwise_and_seed_slice():
     # records carry the exec metadata and keep the pinned schema
     rec = r2.to_record()
     assert tuple(sorted(rec)) == tuple(sorted(RECORD_KEYS))
-    assert rec["exec"] == {"name": "sharded", "mesh": "2x4",
-                           "device_count": 8, "batch": "map"}
+    ex = dict(rec["exec"])
+    assert ex.pop("drive_seconds") > 0
+    assert ex == {"name": "sharded", "mesh": "2x4", "device_count": 8,
+                  "batch": "map", "driver": "stepwise",
+                  "dispatches": 2 * 2 + 2, "warmup": False}
     print("OK")
     """)
 
@@ -145,6 +148,43 @@ def test_nonfused_backends_and_conventional_mesh_invariant():
     a = ShardedSweepRunner([sc], seeds=[0], mesh="1x1").run_scenario(sc)
     b = ShardedSweepRunner([sc], seeds=[0], mesh="2x2").run_scenario(sc)
     assert a.acc == b.acc
+    print("OK")
+    """)
+
+
+def test_chunked_driver_sharded_bitwise_and_mesh_invariant():
+    """The chunked driver on the sharded engine (the round scan runs
+    *inside* the shard_map): bitwise equal to the stepwise sharded run
+    — metrics and final state — at a non-divisible tail window
+    (T=3, eval_every=2), and still bitwise invariant to the mesh."""
+    _run("""
+    import jax, numpy as np
+    from repro.exec import ShardedSweepRunner
+    from repro.sim import get_scenario
+
+    sc = get_scenario("scale_u256").replace(
+        total_IT=3, n_train=512, n_test=128, K=8, K_ps=8, eval_every=2)
+    step = ShardedSweepRunner([sc], seeds=[0, 1], mesh="2x4",
+                              keep_state=True).run_scenario(sc)
+    chunk = ShardedSweepRunner([sc], seeds=[0, 1], mesh="2x4",
+                               driver="chunked",
+                               keep_state=True).run_scenario(sc)
+    assert chunk.rounds == step.rounds == [1, 3]
+    assert chunk.acc == step.acc, (chunk.acc, step.acc)
+    assert chunk.loss == step.loss
+    assert chunk.edge_power == step.edge_power
+    assert chunk.is_power == step.is_power
+    eq = jax.tree.map(
+        lambda a, b: bool((np.asarray(a) == np.asarray(b)).all()),
+        step.final_state, chunk.final_state)
+    assert jax.tree.all(eq), eq
+    assert chunk.exec_info["dispatches"] == 2      # one per eval window
+
+    # chunked retains the engine's bitwise mesh-invariance
+    one = ShardedSweepRunner([sc], seeds=[0, 1], mesh="1x1",
+                             driver="chunked").run_scenario(sc)
+    assert one.acc == chunk.acc
+    assert one.edge_power == chunk.edge_power
     print("OK")
     """)
 
