@@ -49,8 +49,10 @@ def main():
                     help="execution engine (sharded runs the round under "
                          "shard_map on a --mesh device mesh)")
     ap.add_argument("--mesh", default="1x1",
-                    help="CxU device mesh for --exec sharded (axes must "
-                         "divide --C and --M), e.g. 4x1")
+                    help="CxU device mesh for --exec sharded, e.g. 4x1; "
+                         "axes need not divide --C/--M (inactive users "
+                         "are padded in, bitwise identical to the "
+                         "unpadded run)")
     ap.add_argument("--driver", default="stepwise",
                     choices=["stepwise", "chunked"],
                     help="round driver: stepwise (one dispatch per "

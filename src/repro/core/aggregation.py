@@ -14,6 +14,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:  # moved between modules across jax versions
+    from jax.custom_batching import custom_vmap as _custom_vmap
+except ImportError:  # pragma: no cover - version fallback
+    from jax._src.custom_batching import custom_vmap as _custom_vmap
+
+
+@_custom_vmap
+def fence(tree):
+    """`jax.lax.optimization_barrier` with a vmap rule.
+
+    The pinned jax 0.4.37 has no batching rule for the barrier
+    primitive, so a bare barrier breaks the sweep engine's ``vmap``
+    seed-batch mode; under vmap this fences the whole batched value
+    instead (same isolation, one barrier)."""
+    return jax.lax.optimization_barrier(tree)
+
+
+@fence.def_vmap
+def _fence_vmap(axis_size, in_batched, tree):
+    return fence(tree), in_batched[0]
+
 
 @dataclass(frozen=True)
 class FlatSpec:
@@ -59,12 +80,37 @@ def unflatten(spec: FlatSpec, vec: jax.Array):
     return jax.tree.unflatten(spec.treedef, out)
 
 
+def user_energy(flat: jax.Array) -> jax.Array:
+    """Per-transmission symbol energy ``sum(flat^2)`` over the last
+    axis ([..., 2N] -> [...]).
+
+    Both execution engines derive the power metrics through this exact
+    helper (the sharded executor calls it per user inside a
+    ``lax.map``, the single engine batched over [C, M]) and the
+    `optimization_barrier` fences keep the reduction out of
+    engine-specific fusion neighborhoods, so the two programs fold the
+    same subgraph.  The alignment is bitwise for the paper scenarios
+    (pinned in tests/test_uneven_mesh.py); XLA:CPU layout assignment
+    can still reorder the accumulation for some odd shapes, which the
+    cross-engine tests bound at <= 1 ULP on the power scalars (model
+    state stays bitwise everywhere)."""
+    return fence(jnp.sum(jnp.square(fence(flat)), axis=-1))
+
+
+def symbol_power_from_energy(pw: jax.Array, P, n: int) -> jax.Array:
+    """Fold per-transmission energies ([...], from `user_energy`) into
+    the paper's reported average per-symbol power
+    ``mean(P^2 * pw / n)``, fenced exactly like `user_energy` so every
+    engine folds the identical subgraph."""
+    pw, P = fence((jnp.asarray(pw), jnp.asarray(P)))
+    return fence(jnp.mean((P ** 2) * pw / n))
+
+
 def symbol_power(flat: jax.Array, P) -> jax.Array:
     """Average transmit power per complex symbol for one transmission of
     the packed vector `flat` ([..., 2N]) with power multiplier P:
     P^2 * E_n |Delta^cx_n|^2 = P^2 * sum(flat^2)/N, averaged over
-    leading axes (users)."""
+    leading axes (users).  Composed from the shared `user_energy` /
+    `symbol_power_from_energy` pair (see their fencing notes)."""
     two_n = flat.shape[-1]
-    n = two_n // 2
-    per_tx = (P ** 2) * jnp.sum(jnp.square(flat), axis=-1) / n
-    return jnp.mean(per_tx)
+    return symbol_power_from_energy(user_energy(flat), P, two_n // 2)

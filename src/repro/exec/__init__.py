@@ -12,6 +12,9 @@ schema):
   training lax.mapped over each shard's users, the fused cluster hop
   sharded over rx stations x symbols with per-shard counter bases
   (`repro.exec.round`), results bitwise invariant to the mesh shape.
+  Meshes need not divide (C, M): uneven shapes pad inactive users in
+  (amp = w = 0; `pad_plan_for`) and stay bitwise identical to the
+  unpadded single-engine run, so e.g. fig2's (C=4, M=5) runs on 2x4.
 
 Select via ``python -m repro.sim.sweep --exec sharded --mesh 2x4``; on
 CPU hosts force devices first, e.g.
@@ -22,7 +25,7 @@ from __future__ import annotations
 from typing import Sequence, Union
 
 from repro.exec.mesh import (MESH_AXES, host_device_recipe,
-                             make_device_mesh, parse_mesh,
+                             make_device_mesh, pad_plan_for, parse_mesh,
                              validate_mesh_for)
 from repro.exec.round import make_sharded_chunk_fn, make_sharded_round_fn
 from repro.exec.runner import ShardedSweepRunner
@@ -54,4 +57,4 @@ def make_runner(exec_name: str, scenarios: Sequence[Union[str, Scenario]],
 __all__ = ["DRIVERS", "ENGINES", "MESH_AXES", "ShardedSweepRunner",
            "SweepRunner", "host_device_recipe", "make_device_mesh",
            "make_runner", "make_sharded_chunk_fn", "make_sharded_round_fn",
-           "parse_mesh", "validate_mesh_for"]
+           "pad_plan_for", "parse_mesh", "validate_mesh_for"]

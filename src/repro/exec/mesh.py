@@ -10,6 +10,14 @@ mesh shape describes both phases of the round (see `repro.exec.round`).
 Meshes are *functions over jax.devices()*, never module constants
 (importing this module must not touch device state; CI forces host
 devices via XLA_FLAGS before any jax import — see `host_device_recipe`).
+
+A mesh does NOT have to divide the workload: `pad_plan_for` embeds any
+(C, M) into the mesh by padding inactive users/clusters
+(`repro.core.topology.PadPlan`, amp = w = 0), and the executor
+(`repro.exec.round`) computes every hop on the real block only — a
+padded run is bitwise identical to the unpadded single-engine run
+(tests/test_uneven_mesh.py).  `validate_mesh_for` remains the strict
+divide-or-die check for callers that want to reject padding.
 """
 from __future__ import annotations
 
@@ -19,6 +27,8 @@ from typing import Sequence, Tuple, Union
 import jax
 import numpy as np
 from jax.sharding import Mesh
+
+from repro.core.topology import PadPlan, pad_plan
 
 MESH_AXES = ("cluster", "user")
 
@@ -63,12 +73,41 @@ def make_device_mesh(shape: MeshShape) -> Mesh:
 
 
 def validate_mesh_for(mesh: Mesh, C: int, M: int) -> Tuple[int, int]:
-    """Check the (C clusters, M users/cluster) workload divides the
-    mesh; returns the per-shard block ``(C_loc, M_loc)``."""
+    """Strict check that the (C clusters, M users/cluster) workload
+    divides the mesh; returns the per-shard block ``(C_loc, M_loc)``.
+
+    The error names each offending mesh axis and the padded shape that
+    would make it divide — the executor applies exactly that padding
+    automatically via `pad_plan_for`, so this check is only for callers
+    that explicitly refuse padded (inactive-user) layouts.
+    """
     mc, mu = mesh.devices.shape
-    if C % mc or M % mu:
+    plan = pad_plan(C, M, (mc, mu))
+    problems = []
+    if C % mc:
+        problems.append(
+            f"cluster axis: C={C} is not a multiple of the mesh's "
+            f"{mc} cluster shards (pad to C={plan.Cp})")
+    if M % mu:
+        problems.append(
+            f"user axis: M={M} is not a multiple of the mesh's "
+            f"{mu} user shards (pad to M={plan.Mp})")
+    if problems:
         raise ValueError(
-            f"scenario (C={C}, M={M}) does not divide mesh "
-            f"{mc}x{mu}: C must be a multiple of {mc} and M of {mu} "
-            f"(pick a mesh whose axes divide the cluster/user counts)")
+            f"scenario (C={C}, M={M}) does not divide mesh {mc}x{mu} — "
+            + "; ".join(problems)
+            + f". The sharded engine pads inactive users automatically "
+            f"(pad_plan_for -> {plan.Cp}x{plan.Mp}, bitwise identical "
+            f"to the unpadded run); use validate_mesh_for only to "
+            f"reject padded layouts.")
     return C // mc, M // mu
+
+
+def pad_plan_for(mesh: Mesh, C: int, M: int) -> PadPlan:
+    """The `repro.core.topology.PadPlan` embedding a (C, M) workload
+    into `mesh` — the padding counterpart of `validate_mesh_for` that
+    never rejects: any mesh runs any scenario, with inactive users
+    (amp = w = 0) filling the remainder.  ``plan.Cp // mc`` and
+    ``plan.Mp // mu`` are the per-shard block sizes."""
+    mc, mu = mesh.devices.shape
+    return pad_plan(C, M, (mc, mu))

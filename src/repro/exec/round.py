@@ -28,6 +28,28 @@ full-shape program on every device, which is trivially mesh-invariant.
 Power accounting sums per-user energies locally, gathers the tiny
 ``[C, M]`` grid and folds it in a fixed order, again mesh-invariant.
 
+Uneven meshes — any mesh runs any scenario.  When the mesh does not
+divide (C, M), the workload is padded up to the mesh with *inactive*
+users and clusters (`repro.exec.mesh.pad_plan_for`): padded users
+train on zero dummy shards (``lax.map`` skips nothing — the per-slice
+program stays identical, so real users' deltas are untouched) but
+their transmissions never exist — every OTA hop, and the power
+accounting, slices the gathered grid back to the real ``[:C, :M]``
+block before computing, and the fused cluster hop drops inactive rows
+so real users keep their *unpadded* global counter indices (their h/z
+draws are exactly the single-engine draws; inactive rx stations get
+zero-amplitude geometry rows and draw only at padded rx counters).
+The result extends the mesh-invariance theorem to all meshes: a padded
+sharded run is bitwise invariant to the mesh shape for every scenario,
+and bitwise identical to the unpadded single-engine ``batch="map"``
+run — final params, optimizer state, metrics and per-round power — for
+the paper's scenarios, on both round drivers
+(tests/test_uneven_mesh.py pins both).  Model state is bitwise
+cross-engine everywhere; the one known exception is the scalar power
+metrics on some odd fused-backend shapes, where XLA:CPU layout
+assignment rounds the energy fold 1 ULP apart between the two
+programs (bounded by the same tests).
+
 Everything runs *fully manual* (both mesh axes) — the pinned jax
 0.4.37 cannot lower partial-auto shard_map on XLA:CPU (see
 `repro.sharding.api.shard_map`).
@@ -46,7 +68,7 @@ from repro.core.channel import (_cluster_geometry, _seed_words, cluster_ota,
                                 resolve_backend)
 from repro.core.topology import Topology
 from repro.core.whfl import WHFLConfig, make_local_train
-from repro.exec.mesh import validate_mesh_for
+from repro.exec.mesh import pad_plan_for
 from repro.kernels import fused_mac
 # the executor's symbol padding must agree with the kernel's rounding
 from repro.kernels.fused_mac import _round_up
@@ -63,10 +85,20 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
     shard_map per eval window).  Returns ``(_round, state_spec, X, Y)``
     where `_round(state, key, P_t, P_is_t, X_loc, Y_loc)` is valid only
     inside a shard_map over ``("cluster", "user")``.
+
+    A mesh that does not divide (C, M) is handled by padding the
+    workload with inactive users/clusters (`pad_plan_for`): the state's
+    ``opt`` axes, the data shards and the per-shard layout all use the
+    padded (Cp, Mp) grid, while every hop and the power accounting
+    compute on the real ``[:C, :M]`` block only — see module docstring.
+    Callers building states directly must size the opt axes to
+    ``(plan.Cp, plan.Mp)`` (the sweep runners do this automatically).
     """
     C, M = topo.C, topo.M
-    C_loc, M_loc = validate_mesh_for(mesh, C, M)
+    plan = pad_plan_for(mesh, C, M)
+    Cp, Mp = plan.Cp, plan.Mp
     mc, mu = mesh.devices.shape
+    C_loc, M_loc = Cp // mc, Mp // mu
     two_n = spec.two_n
     N = two_n // 2
     Np = _round_up(N, mu)       # symbol axis padded to split over 'user'
@@ -78,19 +110,32 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
     fused_cluster_hop = (cfg.mode != "conventional" and backend == "fused")
     if fused_cluster_hop:
         amp, own, bb = _cluster_geometry(topo, cfg.ota)     # [C, U], .., [C]
+        # inactive rx stations: amp = w = 0 rows (their matched filter,
+        # and hence their combined output, is exactly zero); bb pads
+        # with 1 so the rescale stays finite.  The user axis keeps the
+        # real U — inactive users are dropped before the kernel call
+        # (user_perm below), so real users' counter indices, and with
+        # them every h/z draw, are exactly the unpadded full call's.
+        amp = plan.pad_rx(amp)                              # [Cp, U]
+        own = plan.pad_rx(own)
+        bb = plan.pad_rx(bb, fill=1.0)                      # [Cp]
+        user_perm = jnp.asarray(plan.user_perm())           # [U] static
 
-    X = jnp.asarray(X)
-    Y = jnp.asarray(Y)
+    X = plan.pad_users(jnp.asarray(X))   # inactive users: zero shards
+    Y = plan.pad_users(jnp.asarray(Y))
 
     # -- helpers (valid inside shard_map over ('cluster', 'user')) ----------
 
     def _gather_cm(x_loc):
-        """[C_loc, M_loc, ...] shard -> full [C, M, ...] on every device."""
+        """[C_loc, M_loc, ...] shard -> full [Cp, Mp, ...] on every
+        device, sliced back to the real [C, M, ...] block (inactive
+        users never reach a hop or the power fold)."""
         x = jax.lax.all_gather(x_loc, "user", axis=1, tiled=True)
-        return jax.lax.all_gather(x, "cluster", axis=0, tiled=True)
+        x = jax.lax.all_gather(x, "cluster", axis=0, tiled=True)
+        return plan.unpad_users(x)
 
     def _slice_c(tree, ci):
-        """Replicated [C, ...] pytree -> this shard's [C_loc, ...] rows."""
+        """Replicated [Cp, ...] pytree -> this shard's [C_loc, ...] rows."""
         return jax.tree.map(
             lambda x: jax.lax.dynamic_slice_in_dim(x, ci * C_loc, C_loc, 0),
             tree)
@@ -98,14 +143,18 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
     def users_train(theta_IS, opt_loc, key, step, X_loc, Y_loc, ci, ui):
         """Local training of this shard's users.
 
-        theta_IS: replicated [C]-stacked cluster models; opt/X/Y: the
+        theta_IS: replicated [Cp]-stacked cluster models; opt/X/Y: the
         shard's [C_loc, M_loc, ...] block.  Returns (flat deltas
         [C_loc, M_loc, 2N], opt state, per-user energies [C_loc, M_loc]).
-        The full per-user key grid is derived exactly as in the single-
-        device engine and sliced to the local block, so user (c, m)
-        trains from the same key on every mesh.
+        The per-user key grid is derived over the REAL (C, M) grid
+        exactly as in the single-device engine — inactive users get a
+        dummy zero key — and sliced to the local block, so user (c, m)
+        trains from the same key on every mesh (and every real delta is
+        bitwise the single-engine delta; inactive deltas are computed
+        but never transmitted).
         """
         keys = jax.random.split(key, C * M).reshape(C, M, 2)
+        keys = plan.pad_users(keys)                     # [Cp, Mp, 2]
         keys_loc = jax.lax.dynamic_slice(
             keys, (ci * C_loc, ui * M_loc, 0), (C_loc, M_loc, 2))
         theta_loc = _slice_c(theta_IS, ci)
@@ -117,7 +166,7 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
                 st, x, y, k = a
                 delta, st = local_train(th_c, st, x, y, k, step)
                 flat = agg.flatten(spec, delta)
-                return flat, st, jnp.sum(jnp.square(flat))
+                return flat, st, agg.user_energy(flat)
 
             return jax.lax.map(one_user, (opt_c, x_c, y_c, k_c))
 
@@ -127,23 +176,33 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
 
     def edge_power(pw_loc, P_t):
         """Mesh-invariant `agg.symbol_power`: per-user energies are
-        gathered to the tiny [C, M] grid and folded in a fixed order."""
+        gathered to the tiny real [C, M] grid (inactive users sliced
+        off) and folded through the same fenced subgraph the single
+        engine uses (`agg.symbol_power_from_energy`), so the scalar is
+        bitwise identical across meshes (and across engines for the
+        paper scenarios — see module docstring)."""
         pw = _gather_cm(pw_loc)
-        return jnp.mean((P_t ** 2) * pw / N)
+        return agg.symbol_power_from_energy(pw, P_t, N)
 
     def fused_cluster_estimate(key, flat_loc, P_t, ci, ui):
         """Sharded fused cluster hop: rx stations over 'cluster',
         symbols over 'user', channels drawn in-kernel at the shard's
-        global tile origin.  Returns the replicated [C, 2N] estimate —
-        identical to `FusedBackend.cluster` on one device."""
+        global tile origin.  Returns the replicated [Cp, 2N] estimate
+        whose real rows are identical to `FusedBackend.cluster` on one
+        device (inactive rows are exactly zero)."""
         # redistribute (users -> symbols): [C_loc, M_loc, N] local users
-        # with all symbols  ->  [U, N_loc] all users, local symbols
+        # with all symbols  ->  [U, N_loc] all users, local symbols.
+        # The padded-grid rows come back in (Cp, Mp) order; gathering
+        # `user_perm` drops inactive users AND restores the unpadded
+        # c*M + m user order, so the kernel sees the exact [U, N] tile
+        # (and counter indices) of the single-engine call.
         def redistribute(t):
             t = jnp.pad(t, ((0, 0), (0, 0), (0, Np - N)))
             t = jax.lax.all_to_all(t, "user", split_axis=2, concat_axis=1,
-                                   tiled=True)            # [C_loc, M, N_loc]
+                                   tiled=True)           # [C_loc, Mp, N_loc]
             t = jax.lax.all_gather(t, "cluster", axis=0, tiled=True)
-            return t.reshape(C * M, N_loc)
+            t = t.reshape(Cp * Mp, N_loc)
+            return t if plan.is_identity else jnp.take(t, user_perm, axis=0)
 
         t_re = P_t * redistribute(flat_loc[..., :N])
         t_im = P_t * redistribute(flat_loc[..., N:])
@@ -163,19 +222,24 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
             **blocks)
         scale = P_t * topo.sigma_h2 * bb_loc[:, None]
 
-        def collect(y):                       # [C_loc, N_loc] -> [C, N]
+        def collect(y):                       # [C_loc, N_loc] -> [Cp, N]
             y = jax.lax.all_gather(y, "user", axis=1, tiled=True)[:, :N]
             return jax.lax.all_gather(y, "cluster", axis=0, tiled=True)
 
         est_re = collect(y_re / topo.K / scale)
         est_im = collect(y_im / topo.K / scale)
-        return jnp.concatenate([est_re, est_im], axis=-1)   # [C, 2N]
+        return jnp.concatenate([est_re, est_im], axis=-1)   # [Cp, 2N]
 
     def cluster_estimate(key, flat_loc, P_t, ci, ui):
+        """Replicated [Cp, 2N] cluster estimate; real rows == the
+        single-engine `cluster_ota`, inactive rows zero."""
         if fused_cluster_hop:
             return fused_cluster_estimate(key, flat_loc, P_t, ci, ui)
-        # small/closed-form backends: gather and compute replicated
-        return cluster_ota(key, _gather_cm(flat_loc), topo, P_t, cfg.ota)
+        # small/closed-form backends: gather the real block and compute
+        # replicated — the literal single-engine hop on identical input
+        # (inactive clusters receive a zero-padded estimate row)
+        return plan.pad_rx(cluster_ota(key, _gather_cm(flat_loc), topo,
+                                       P_t, cfg.ota))
 
     # -- the round body ------------------------------------------------------
 
@@ -187,7 +251,7 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
         theta = state["theta"]
         step = state["t"]
         theta_IS = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (C,) + x.shape), theta)
+            lambda x: jnp.broadcast_to(x, (Cp,) + x.shape), theta)
 
         if cfg.mode == "conventional":
             k1, k2 = jax.random.split(key)
@@ -209,7 +273,7 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
             k1, k2 = jax.random.split(k)
             flat_loc, opt_state, pw = users_train(
                 th_IS, opt_state, k1, step, X_loc, Y_loc, ci, ui)
-            est = cluster_estimate(k2, flat_loc, P_t, ci, ui)    # [C, 2N]
+            est = cluster_estimate(k2, flat_loc, P_t, ci, ui)    # [Cp, 2N]
             th_IS = jax.vmap(
                 lambda th, e: apply_updates(th, agg.unflatten(spec, e))
             )(th_IS, est)
@@ -220,9 +284,13 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
             cluster_iter, (theta_IS, state["opt"], jnp.zeros(())),
             keys[: cfg.I])
 
+        # only the real clusters transmit to the PS
+        theta_IS_act = (theta_IS if Cp == C else
+                        jax.tree.map(lambda x: x[:C], theta_IS))
         is_deltas = jax.vmap(
             lambda th: agg.flatten(
-                spec, jax.tree.map(lambda a, b: a - b, th, theta)))(theta_IS)
+                spec,
+                jax.tree.map(lambda a, b: a - b, th, theta)))(theta_IS_act)
         est = global_ota(keys[-1], is_deltas, topo, P_is_t, cfg.ota)
         theta = apply_updates(theta, agg.unflatten(spec, est))
         p_is = agg.symbol_power(is_deltas, P_is_t)
@@ -249,8 +317,13 @@ def make_sharded_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
     Same contract as `repro.core.whfl.make_round_fn` — pure, jit-able,
     seed-batchable — plus the mesh-invariance guarantee: for a fixed
     scenario and seed, the returned state is bitwise identical for
-    every mesh shape that divides (C, M), including ``1x1``
-    (`tests/test_exec_sharded.py` pins this).
+    EVERY mesh shape, including ``1x1`` and meshes that do not divide
+    (C, M) — those run with inactive-user padding
+    (`repro.exec.mesh.pad_plan_for`), and the state's ``opt`` axes must
+    then be sized ``(plan.Cp, plan.Mp)`` (e.g.
+    ``init_round_state(params, opt, plan.Cp, plan.Mp)``; the sweep
+    runners do this automatically).  Pinned by
+    `tests/test_exec_sharded.py` and `tests/test_uneven_mesh.py`.
     """
     _round, state_spec, X, Y = _build_round_parts(
         loss_fn, opt, topo, cfg, spec, X, Y, mesh,

@@ -19,6 +19,8 @@ from typing import Dict, Sequence, Union
 
 import jax
 
+from repro.core.topology import PadPlan, pad_plan
+from repro.core.whfl import init_round_state
 from repro.exec.mesh import make_device_mesh, parse_mesh
 from repro.exec.round import make_sharded_chunk_fn, make_sharded_round_fn
 from repro.sim.scenario import Scenario
@@ -28,9 +30,14 @@ from repro.sim.sweep import SweepRunner
 class ShardedSweepRunner(SweepRunner):
     """Run scenarios sharded over a ``(cluster, user)`` device mesh.
 
-    mesh: ``"CxU"`` string or ``(C_shards, U_shards)`` tuple.  Each
-    scenario must divide the mesh (C % C_shards == 0, M % U_shards ==
-    0); the symbol axis of the fused OTA hop is padded to split evenly.
+    mesh: ``"CxU"`` string or ``(C_shards, U_shards)`` tuple.  A
+    scenario need NOT divide the mesh: when it doesn't, the workload is
+    padded with inactive users (amp = w = 0; `pad_plan_for`) — the
+    ``opt`` state axes are sized to the padded (Cp, Mp) grid here and
+    stripped again before ``final_state`` is stored, so results (and
+    final states) stay bitwise identical to the unpadded single-engine
+    run.  The symbol axis of the fused OTA hop is likewise padded to
+    split evenly.
     The seed axis always uses the ``map`` batch mode — the sharded
     engine's contract is bitwise reproducibility, which vmap's
     batch-size-dependent lowering would break.  Both round drivers are
@@ -48,6 +55,27 @@ class ShardedSweepRunner(SweepRunner):
                          driver=driver, warmup=warmup)
         self.mesh_shape = parse_mesh(mesh)
         self.mesh = make_device_mesh(self.mesh_shape)
+
+    def _pad_plan(self, topo) -> PadPlan:
+        """The inactive-user embedding of this runner's mesh for one
+        scenario's (C, M) workload (identity when the mesh divides)."""
+        return pad_plan(topo.C, topo.M, self.mesh_shape)
+
+    def _init_states(self, params, opt, topo):
+        plan = self._pad_plan(topo)
+        return [init_round_state(p, opt, plan.Cp, plan.Mp) for p in params]
+
+    def _finalize_state(self, state, topo):
+        """Strip the padded opt rows/cols (leading axis is the seed
+        batch) so final states compare tree-equal across engines and
+        meshes."""
+        plan = self._pad_plan(topo)
+        if plan.is_identity:
+            return state
+        state = dict(state)
+        state["opt"] = jax.tree.map(lambda x: x[:, : topo.C, : topo.M],
+                                    state["opt"])
+        return state
 
     def _build_round(self, sc, loss_fn, opt, topo, cfg, spec, X, Y, counter):
         round_fn = make_sharded_round_fn(loss_fn, opt, topo, cfg, spec,
@@ -72,7 +100,13 @@ class ShardedSweepRunner(SweepRunner):
 
         return jax.jit(batched, donate_argnums=(0, 1))
 
-    def _exec_info(self) -> Dict:
+    def _exec_info(self, topo=None) -> Dict:
         mc, mu = self.mesh_shape
-        return {"name": "sharded", "mesh": f"{mc}x{mu}",
-                "device_count": mc * mu, "batch": self.batch}
+        info = {"name": "sharded", "mesh": f"{mc}x{mu}",
+                "device_count": mc * mu, "batch": self.batch,
+                "padded": None}
+        if topo is not None:
+            plan = self._pad_plan(topo)
+            if not plan.is_identity:
+                info["padded"] = f"{plan.Cp}x{plan.Mp}"
+        return info

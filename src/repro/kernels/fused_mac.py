@@ -33,6 +33,16 @@ bitwise invariant to mesh shape.  `assert_draw_invariance` verifies
 the property (offset generation == slice of the enclosing full-range
 generation, bit-exact).
 
+Padded (uneven-mesh) callers: transmitters with amp = w = 0
+contribute exactly zero to both the received signal and the matched
+filter, and extra rx rows with zero amplitude rows output exactly
+zero — but every row still CONSUMES counter draws at its logical
+indices.  The uneven-mesh executor therefore drops inactive users
+*before* the call (keeping U, and with it the u-blocking and counter
+range, identical to the unpadded call) and appends inactive rx rows
+*after* the real ones, so real (rx, u, n) indices — and every h/z
+draw — are untouched by padding (see `repro.exec.round`).
+
 Layout mirrors `ota_combine`: planar float32 (re, im), symbol axis N in
 lanes, grid ``(B_rx, N/bn, K/bk, U/bu)`` with the two reduction axes
 (antennas, transmitters) minor.  Received signal and matched filter are

@@ -16,7 +16,9 @@ trace, so scenarios are looped; homogeneous seeds are vmapped.
 
 `--exec sharded --mesh 2x4` swaps the single-device round for the
 mesh-sharded engine (`repro.exec.ShardedSweepRunner` — shard_map over
-a (cluster, user) device mesh, bitwise invariant to the mesh shape);
+a (cluster, user) device mesh, bitwise invariant to the mesh shape;
+meshes that do not divide (C, M) pad inactive users in, so any mesh
+runs any scenario);
 `--driver chunked` swaps the per-round host loop for the
 device-resident chunked driver (`lax.scan` per eval window, donated
 carry buffers, async metric fetch — bitwise equal to stepwise under
@@ -167,6 +169,18 @@ class SweepRunner:
 
     # -- engine hooks (overridden by repro.exec.ShardedSweepRunner) ---------
 
+    def _init_states(self, params, opt, topo):
+        """Per-seed initial round states.  Engine hook: the sharded
+        engine sizes the per-user ``opt`` axes to its mesh's padded
+        (Cp, Mp) grid when the mesh does not divide (C, M)."""
+        return [init_round_state(p, opt, topo.C, topo.M) for p in params]
+
+    def _finalize_state(self, state, topo):
+        """The state view stored as ``final_state``.  Engine hook: the
+        sharded engine strips inactive-user padding here, so
+        cross-engine final states compare tree-equal."""
+        return state
+
     def _build_round(self, sc: Scenario, loss_fn, opt, topo, cfg, spec,
                      X, Y, counter):
         """Build the seed-batched round executor
@@ -215,10 +229,12 @@ class SweepRunner:
                               split_fn=jax.vmap(jax.random.split))
         return jax.jit(chunk, donate_argnums=(0, 1))
 
-    def _exec_info(self) -> Dict:
+    def _exec_info(self, topo=None) -> Dict:
         """Execution-engine metadata recorded with every result.
         `device_count` is the number of devices the engine *uses* (not
-        how many are visible): always 1 for the single-device engine."""
+        how many are visible): always 1 for the single-device engine.
+        `topo` (when given) lets engines record workload-dependent
+        metadata — the sharded engine reports its padded shape."""
         return {"name": "single", "mesh": None,
                 "device_count": 1, "batch": self.batch}
 
@@ -238,7 +254,7 @@ class SweepRunner:
                   for s in self.seeds]
         spec = agg.make_flat_spec(params[0])
         counter = [0]
-        states = [init_round_state(p, opt, topo.C, topo.M) for p in params]
+        states = self._init_states(params, opt, topo)
         state = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
         keys = jnp.stack([jax.random.PRNGKey(s + 1) for s in self.seeds])
 
@@ -276,7 +292,7 @@ class SweepRunner:
                 sc, loss_fn, opt, topo, cfg, spec, X, Y, counter, _eval,
                 state, keys, T, rounds, record)
 
-        exec_info = {**self._exec_info(), "driver": self.driver,
+        exec_info = {**self._exec_info(topo), "driver": self.driver,
                      "dispatches": dispatches, "drive_seconds": drive_s,
                      "warmup": self.warmup}
         return SweepResult(
@@ -284,7 +300,8 @@ class SweepRunner:
             loss=loss_t, edge_power=pe_t, is_power=pi_t,
             n_traces=counter[0], seconds=time.time() - t0,
             exec_info=exec_info,
-            final_state=state if self.keep_state else None)
+            final_state=(self._finalize_state(state, topo)
+                         if self.keep_state else None))
 
     # -- the stepwise driver: one dispatch per round ------------------------
 
@@ -477,8 +494,13 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
                          "mesh-invariant, forces --batch map)")
     ap.add_argument("--mesh", default="1x1",
                     help="device mesh CxU for --exec sharded, e.g. 2x4 "
-                         "(clusters x users-per-cluster shards); on CPU "
-                         "force host devices with XLA_FLAGS="
+                         "(clusters x users-per-cluster shards); the "
+                         "axes need NOT divide the scenario's (C, M) — "
+                         "inactive users are padded in with amp = w = 0 "
+                         "and the run stays bitwise identical to the "
+                         "single-engine run (so e.g. fig2's M=5 runs on "
+                         "2x4); on CPU force host devices with "
+                         "XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N")
     ap.add_argument("--out", default=None, help="write JSON document here")
     ap.add_argument("--bench-out", default=None,

@@ -6,9 +6,44 @@ Marker conventions (declared in pytest.ini):
   full suite with `-m ""` or just the slow tier with `-m slow`.
 - `tpu`: needs a real TPU backend (compiled Pallas kernels).  Tests so
   marked are auto-skipped here when the default jax backend is not TPU.
+
+Shared helpers for the sharded-engine suites (test_exec_sharded,
+test_uneven_mesh): multi-device checks must run in subprocesses with
+XLA_FLAGS=--xla_force_host_platform_device_count=N because the main
+pytest process has to keep seeing 1 device.
 """
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
+import numpy as np
 import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_forced_devices(script: str, n_dev: int = 8,
+                       timeout: int = 1800) -> str:
+    """Run `script` in a fresh python with `n_dev` forced host devices;
+    assert it exits 0 and return its stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                         env=env, capture_output=True, text=True,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+class FakeMesh:
+    """Stand-in for a jax Mesh where only ``.devices.shape`` is read
+    (mesh-shape validation/padding helpers)."""
+
+    def __init__(self, mc: int, mu: int):
+        self.devices = np.empty((mc, mu), dtype=object)
 
 
 def pytest_collection_modifyitems(config, items):

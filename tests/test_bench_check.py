@@ -1,0 +1,208 @@
+"""Unit tests for `benchmarks.bench_check` — the CI perf gate.
+
+The gate script guards every sharded/driver sweep in CI, so each of
+its branches is exercised here against synthetic baseline/candidate
+JSON documents (no committed baseline is touched): the >2x regression
+trip, the chunked-slower-than-stepwise trip, the >= 4x
+dispatch-reduction pass/trip, and the missing-scenario / ambiguity /
+schema-unwrap handling.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import bench_check  # noqa: E402
+
+
+def rec(scenario="sc", rps=10.0, driver="stepwise", name="single",
+        mesh=None, dispatches=None):
+    """One BENCH_sweep record, shaped like repro.sim.sweep.bench_doc."""
+    return {"scenario": scenario, "rounds_per_sec": rps, "driver": driver,
+            "dispatches": dispatches,
+            "exec": {"name": name, "mesh": mesh, "driver": driver}}
+
+
+def sweep_doc(records):
+    return {"schema": "repro.bench.sweep/v1", "records": records}
+
+
+def baseline_doc(records):
+    return {"schema": bench_check.BASELINE_SCHEMA,
+            "sweep": {"records": records}}
+
+
+@pytest.fixture
+def write(tmp_path):
+    def _write(name, doc):
+        path = tmp_path / name
+        path.write_text(json.dumps(doc))
+        return str(path)
+    return _write
+
+
+def run(write, fresh, baseline, extra=()):
+    f = write("fresh.json", sweep_doc(fresh))
+    b = write("baseline.json", baseline_doc(baseline))
+    return bench_check.main([f, "--baseline", b, *extra])
+
+
+# ---------------------------------------------------------------------------
+# regression gate
+# ---------------------------------------------------------------------------
+
+def test_regression_pass_at_and_above_floor(write, capsys):
+    # exactly at the 2x floor passes; comfortably above passes
+    fresh = [rec(rps=5.0), rec("other", rps=100.0, driver="chunked")]
+    base = [rec(rps=10.0), rec("other", rps=10.0, driver="chunked")]
+    assert run(write, fresh, base) == 0
+    out = capsys.readouterr().out
+    assert "all bench gates passed" in out
+    assert "[ok]" in out and "FAIL" not in out
+
+
+def test_regression_trips_beyond_2x(write, capsys):
+    fresh = [rec(rps=4.9)]
+    base = [rec(rps=10.0)]
+    assert run(write, fresh, base) == 1
+    err = capsys.readouterr().err
+    assert ">2.0x below the baseline" in err
+
+
+def test_regression_respects_max_regression_flag(write):
+    fresh = [rec(rps=4.9)]
+    base = [rec(rps=10.0)]
+    assert run(write, fresh, base, ["--max-regression", "3"]) == 0
+
+
+def test_regression_keys_on_scenario_engine_driver_mesh(write, capsys):
+    # a sharded 2x4 record must NOT be gated by the single-engine
+    # baseline of the same scenario (different key) — but with no
+    # matching key at all, the no-op guard trips
+    fresh = [rec(rps=1.0, name="sharded", mesh="2x4")]
+    base = [rec(rps=100.0, name="single")]
+    assert run(write, fresh, base) == 1
+    err = capsys.readouterr().err
+    assert "matched NO fresh record" in err
+
+
+def test_missing_scenario_is_skipped_when_others_match(write, capsys):
+    # fresh record without a baseline: reported as [skip], not a
+    # failure; unmatched baseline records are listed
+    fresh = [rec(rps=10.0), rec("new_scenario", rps=0.001)]
+    base = [rec(rps=10.0), rec("retired_scenario", rps=5.0)]
+    assert run(write, fresh, base) == 0
+    out = capsys.readouterr().out
+    assert "[skip]" in out and "new_scenario" in out
+    assert "[unmatched baseline]" in out and "retired_scenario" in out
+
+
+# ---------------------------------------------------------------------------
+# speedup gate (chunked vs stepwise)
+# ---------------------------------------------------------------------------
+
+def _driver_pair_fresh(step_rps, chunk_rps, scenario="sc"):
+    return [rec(scenario, rps=step_rps, driver="stepwise", dispatches=96),
+            rec(scenario, rps=chunk_rps, driver="chunked", dispatches=7)]
+
+
+def _driver_pair_base():
+    return [rec(rps=1e-6, driver="stepwise"),
+            rec(rps=1e-6, driver="chunked")]
+
+
+def test_speedup_passes_when_chunked_not_slower(write):
+    assert run(write, _driver_pair_fresh(10.0, 10.0), _driver_pair_base(),
+               ["--expect-speedup", "sc:1.0"]) == 0
+
+
+def test_speedup_trips_when_chunked_slower(write, capsys):
+    assert run(write, _driver_pair_fresh(10.0, 9.0), _driver_pair_base(),
+               ["--expect-speedup", "sc:1.0"]) == 1
+    err = capsys.readouterr().err
+    assert "speedup 0.90x < required 1.0x" in err
+
+
+def test_speedup_needs_both_driver_records(write, capsys):
+    fresh = [rec(rps=10.0, driver="stepwise")]
+    assert run(write, fresh, [rec(rps=1e-6)],
+               ["--expect-speedup", "sc:1.0"]) == 1
+    assert "needs both a stepwise and a chunked record" in \
+        capsys.readouterr().err
+
+
+def test_speedup_missing_scenario_fails_not_passes(write, capsys):
+    # gating a scenario that is absent from the fresh documents must
+    # fail loudly, never silently pass
+    assert run(write, _driver_pair_fresh(10.0, 10.0), _driver_pair_base(),
+               ["--expect-speedup", "absent:1.0"]) == 1
+    assert "'absent'" in capsys.readouterr().err
+
+
+def test_speedup_ambiguous_duplicate_records(write, capsys):
+    fresh = _driver_pair_fresh(10.0, 10.0) + [
+        rec(rps=20.0, driver="chunked", name="sharded", mesh="2x4",
+            dispatches=7)]
+    assert run(write, fresh, _driver_pair_base(),
+               ["--expect-speedup", "sc:1.0"]) == 1
+    assert "ambiguous" in capsys.readouterr().err
+
+
+def test_speedup_zero_stepwise_rps_is_an_error(write, capsys):
+    assert run(write, _driver_pair_fresh(0.0, 10.0), _driver_pair_base(),
+               ["--expect-speedup", "sc:1.0"]) == 1
+    assert "no valid" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# dispatch-ratio gate
+# ---------------------------------------------------------------------------
+
+def test_dispatch_ratio_4x_passes(write, capsys):
+    # 96 stepwise vs 7 chunked dispatches = 13.7x >= 4x
+    assert run(write, _driver_pair_fresh(10.0, 10.0), _driver_pair_base(),
+               ["--expect-dispatch-ratio", "sc:4"]) == 0
+    assert "13.7x reduction" in capsys.readouterr().out
+
+
+def test_dispatch_ratio_trips_below_requirement(write, capsys):
+    fresh = [rec(rps=10.0, driver="stepwise", dispatches=12),
+             rec(rps=10.0, driver="chunked", dispatches=7)]
+    assert run(write, fresh, _driver_pair_base(),
+               ["--expect-dispatch-ratio", "sc:4"]) == 1
+    assert "dispatch reduction 1.7x < required 4.0x" in \
+        capsys.readouterr().err
+
+
+def test_dispatch_ratio_missing_counts_never_pass(write, capsys):
+    fresh = [rec(rps=10.0, driver="stepwise"),        # dispatches=None
+             rec(rps=10.0, driver="chunked", dispatches=7)]
+    assert run(write, fresh, _driver_pair_base(),
+               ["--expect-dispatch-ratio", "sc:4"]) == 1
+    assert "dispatch counts missing" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# CLI / document plumbing
+# ---------------------------------------------------------------------------
+
+def test_bad_gate_spec_is_a_usage_error(write):
+    f = write("fresh.json", sweep_doc([rec()]))
+    b = write("baseline.json", baseline_doc([rec()]))
+    with pytest.raises(SystemExit) as ei:
+        bench_check.main([f, "--baseline", b, "--expect-speedup",
+                          "no-ratio-here"])
+    assert ei.value.code == 2
+
+
+def test_reads_both_schemas_and_multiple_fresh_docs(write):
+    # fresh docs may be raw BENCH_sweep or baseline-wrapped; several
+    # fresh files accumulate
+    f1 = write("a.json", sweep_doc([rec("s1", rps=10.0)]))
+    f2 = write("b.json", baseline_doc([rec("s2", rps=10.0)]))
+    b = write("base.json",
+              baseline_doc([rec("s1", rps=10.0), rec("s2", rps=10.0)]))
+    assert bench_check.main([f1, f2, "--baseline", b]) == 0

@@ -8,27 +8,11 @@ host devices, so those checks run in a subprocess with
 XLA_FLAGS=--xla_force_host_platform_device_count=8 (the main pytest
 process must keep seeing 1 device).
 """
-import os
-import subprocess
-import sys
-import textwrap
-
 import pytest
+from conftest import FakeMesh
+from conftest import run_forced_devices as _run
 
 from repro.exec import host_device_recipe, make_device_mesh, parse_mesh
-
-_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-
-def _run(script: str, n_dev: int = 8) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
-    env["PYTHONPATH"] = os.path.join(_REPO, "src")
-    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
-                         env=env, capture_output=True, text=True,
-                         timeout=900)
-    assert out.returncode == 0, out.stdout + "\n" + out.stderr
-    return out.stdout
 
 
 # ---------------------------------------------------------------------------
@@ -66,17 +50,12 @@ def test_engine_registry():
 
 
 def test_mesh_divisibility_validation():
-    import numpy as np
-
     from repro.exec import validate_mesh_for
 
-    class _FakeMesh:  # validate_mesh_for only reads .devices.shape
-        devices = np.empty((2, 4), dtype=object)
-
     assert validate_mesh_for(make_device_mesh("1x1"), 4, 5) == (4, 5)
-    assert validate_mesh_for(_FakeMesh(), 4, 64) == (2, 16)
+    assert validate_mesh_for(FakeMesh(2, 4), 4, 64) == (2, 16)
     with pytest.raises(ValueError, match="does not divide"):
-        validate_mesh_for(_FakeMesh(), 4, 5)
+        validate_mesh_for(FakeMesh(2, 4), 4, 5)
 
 
 # ---------------------------------------------------------------------------
@@ -121,7 +100,7 @@ def test_scale_u256_sharded_1x1_vs_2x4_bitwise_and_seed_slice():
     ex = dict(rec["exec"])
     assert ex.pop("drive_seconds") > 0
     assert ex == {"name": "sharded", "mesh": "2x4", "device_count": 8,
-                  "batch": "map", "driver": "stepwise",
+                  "batch": "map", "driver": "stepwise", "padded": None,
                   "dispatches": 2 * 2 + 2, "warmup": False}
     print("OK")
     """)

@@ -109,6 +109,53 @@ def test_symbol_power_nonnegative_and_quadratic(shape, seed):
     np.testing.assert_allclose(p3, 9 * p1, rtol=1e-5)
 
 
+@given(C=st.integers(1, 12), M=st.integers(1, 12),
+       mc=st.integers(1, 5), mu=st.integers(1, 5))
+@settings(**SETTINGS)
+def test_pad_plan_properties(C, M, mc, mu):
+    """The inactive-user padding invariants (repro.core.topology):
+    minimal mesh-divisible padded shape, active mask covering exactly
+    the C*M real users, padded entries amp = w = 0, idempotence
+    (an already-divisible workload pads to itself), and a user
+    permutation that hits exactly the active slots in engine order."""
+    from repro.core.topology import pad_plan
+    plan = pad_plan(C, M, (mc, mu))
+    # padded shape: divisible by the mesh, minimal
+    assert plan.Cp % mc == 0 and plan.Mp % mu == 0
+    assert 0 <= plan.Cp - C < mc and 0 <= plan.Mp - M < mu
+    # active mask covers exactly the real users
+    mask = plan.active_mask()
+    assert mask.shape == (plan.Cp, plan.Mp)
+    assert int(mask.sum()) == C * M
+    assert mask[:C, :M].all()
+    # padded entries carry amp = w = 0 (pad fill), active ones pass
+    # through untouched
+    amp = np.asarray(plan.pad_users(np.ones((C, M), np.float32)))
+    assert (amp[mask] == 1).all()
+    assert (amp[~mask] == 0).all()
+    w_rx = np.asarray(plan.pad_rx(np.ones((C, 7), np.float32)))
+    assert (w_rx[:C] == 1).all() and (w_rx[C:] == 0).all()
+    # idempotence: the padded shape re-pads to itself, and a dividing
+    # workload is the identity embedding
+    again = pad_plan(plan.Cp, plan.Mp, (mc, mu))
+    assert again.is_identity
+    assert (again.Cp, again.Mp) == (plan.Cp, plan.Mp)
+    assert plan.is_identity == (C % mc == 0 and M % mu == 0)
+    # unpad inverts pad on the active block
+    x = np.arange(C * M, dtype=np.float32).reshape(C, M)
+    np.testing.assert_array_equal(
+        np.asarray(plan.unpad_users(plan.pad_users(x))), x)
+    # the user permutation enumerates exactly the active flat slots in
+    # the engines' row-major user order
+    perm = plan.user_perm()
+    assert perm.shape == (C * M,)
+    np.testing.assert_array_equal(np.sort(perm),
+                                  np.flatnonzero(mask.reshape(-1)))
+    np.testing.assert_array_equal(
+        perm, (np.arange(C)[:, None] * plan.Mp
+               + np.arange(M)[None, :]).reshape(-1))
+
+
 @given(eta=st.floats(1e-4, 0.9), tau=st.integers(1, 4), I=st.integers(1, 4))
 @settings(**SETTINGS)
 def test_bound_monotone_in_noise(eta, tau, I):
