@@ -31,16 +31,27 @@ sub-ms rounds (see ROADMAP "Round drivers on real TPU").
         --expect-speedup scale_u256_bench:1.0 \
         --expect-dispatch-ratio scale_u256_bench:4
 
+``--append PATH`` additionally records the fresh rounds/sec numbers into
+an append-only time-series document (``BENCH_trajectory.json``), one
+entry per CI run.  The entry is written whether or not the gates pass —
+the trajectory records reality, the exit code enforces policy — so a
+slow creep that never trips the 2x regression gate is still visible in
+the series.  CI persists the document across runs via ``actions/cache``
+and uploads it as an artifact (see the ``bench-smoke`` job).
+
 Exit code 0 = all gates pass; 1 = any gate failed (CI fails the job).
 """
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
+import os
 import sys
 from typing import Dict, List, Tuple
 
 BASELINE_SCHEMA = "repro.bench.baseline/v1"
+TRAJECTORY_SCHEMA = "repro.bench.trajectory/v1"
 
 
 def _key(rec: Dict) -> Tuple:
@@ -154,6 +165,47 @@ def check_dispatch_ratio(fresh: List[Dict], scenario: str,
     return []
 
 
+def append_trajectory(path: str, fresh: List[Dict], passed: bool,
+                      run_id: str, timestamp: str) -> None:
+    """Append one run entry to the time-series document at ``path``.
+
+    Creates the document when absent; refuses to clobber a file that is
+    not a trajectory document (a mis-pointed ``--append`` at a sweep or
+    baseline JSON must not silently destroy it).
+    """
+    doc = {"schema": TRAJECTORY_SCHEMA, "runs": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            existing = json.load(f)
+        if existing.get("schema") != TRAJECTORY_SCHEMA:
+            raise SystemExit(
+                f"--append target {path!r} has schema "
+                f"{existing.get('schema')!r}, expected {TRAJECTORY_SCHEMA!r}"
+                f" — refusing to overwrite")
+        doc = existing
+    entry = {
+        "run_id": run_id,
+        "timestamp": timestamp,
+        "passed": passed,
+        "records": [
+            {"scenario": r["scenario"],
+             "exec": r.get("exec", {}).get("name"),
+             "driver": r.get("driver", r.get("exec", {}).get("driver")),
+             "mesh": r.get("exec", {}).get("mesh"),
+             "rounds_per_sec": r.get("rounds_per_sec"),
+             "dispatches": r.get("dispatches")}
+            for r in fresh
+        ],
+    }
+    doc["runs"].append(entry)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"trajectory: appended run {run_id!r} "
+          f"({len(entry['records'])} records, total {len(doc['runs'])} runs)"
+          f" -> {path}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="Gate BENCH_sweep.json against the committed baseline")
@@ -172,6 +224,14 @@ def main(argv=None) -> int:
                     help="require the stepwise record of SCENARIO to "
                          "issue >= RATIO x the chunked record's host "
                          "dispatches (repeatable)")
+    ap.add_argument("--append", metavar="PATH", default=None,
+                    help="append the fresh rounds/sec records to the "
+                         "time-series document at PATH (created when "
+                         "absent; written whether or not gates pass)")
+    ap.add_argument("--run-id",
+                    default=os.environ.get("GITHUB_RUN_ID", "local"),
+                    help="identifier stored with the --append entry "
+                         "(default: $GITHUB_RUN_ID or 'local')")
     args = ap.parse_args(argv)
 
     fresh: List[Dict] = []
@@ -201,6 +261,11 @@ def main(argv=None) -> int:
         name, ratio = parse_spec(spec)
         print(f"dispatch gate ({spec}):")
         errors += check_dispatch_ratio(fresh, name, ratio)
+
+    if args.append:
+        stamp = datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds")
+        append_trajectory(args.append, fresh, not errors, args.run_id, stamp)
 
     if errors:
         print("\nFAILED:", file=sys.stderr)

@@ -8,7 +8,6 @@ matched edge power) and tracks the error-free baseline.
 from __future__ import annotations
 
 import time
-from typing import List
 
 import numpy as np
 
@@ -38,7 +37,6 @@ def main(quick: bool = True):
     curves = run()
     dt = time.time() - t0
     lines = []
-    ef = curves["error-free"][-1]
     for name, c in curves.items():
         lines.append(
             f"fig4_bound/{name},{1e6 * dt / len(curves):.1f},"

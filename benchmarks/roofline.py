@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Dict, List, Optional
+from typing import List
 
 from repro.configs import INPUT_SHAPES, get_config
 

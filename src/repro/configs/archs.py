@@ -17,6 +17,14 @@ from repro.configs.chatglm3_6b import CHATGLM3_6B
 from repro.configs.zamba2_7b import ZAMBA2_7B
 from repro.configs.mamba2_780m import MAMBA2_780M
 
+# Imported for registration side-effects and re-exported for callers that
+# want the config constants by name.
+__all__ = [
+    "QWEN2_1_5B", "QWEN3_4B", "LLAVA_NEXT_34B", "SEAMLESS_M4T_MEDIUM",
+    "QWEN3_MOE_235B", "QWEN2_0_5B", "ARCTIC_480B", "CHATGLM3_6B",
+    "ZAMBA2_7B", "MAMBA2_780M", "MNIST_MLP", "CIFAR_CNN", "ASSIGNED",
+]
+
 # --- the paper's own experiment models (Section V) ---------------------------
 
 MNIST_MLP = register(ArchConfig(

@@ -8,7 +8,7 @@ way the paper reports it (average per-symbol power at the edge).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -104,6 +104,90 @@ def symbol_power_from_energy(pw: jax.Array, P, n: int) -> jax.Array:
     engine folds the identical subgraph."""
     pw, P = fence((jnp.asarray(pw), jnp.asarray(P)))
     return fence(jnp.mean((P ** 2) * pw / n))
+
+
+# ---------------------------------------------------------------------------
+# partial participation: COTAF-style precoding + attendance rescale
+# ---------------------------------------------------------------------------
+
+def cotaf_precode(flat: jax.Array, scale: jax.Array) -> jax.Array:
+    """Per-user transmit precoding: ``flat [..., C, M, 2N] * scale
+    [..., C, M]`` broadcast over the symbol axis.
+
+    A sampled-out user gets scale 0 — its transmission *is* the
+    inactive pad slot of `repro.core.topology.PadPlan`, drawn per round
+    — a free rider 0, a byzantine user ``-byzantine_scale``, an honest
+    one 1.  Scaling happens before any hop AND before the power fold,
+    so both execution engines square/sum bitwise-identical symbol
+    values (dropped users contribute exactly zero energy)."""
+    return flat * scale[..., None]
+
+
+def attendance_rescale(weights, claimed: jax.Array,
+                       axis: int = -1) -> jax.Array:
+    """COTAF-style time-varying renormalization for the realized
+    attendance (Sery et al.: the precoding factor follows the active
+    set, so the estimate stays unbiased under partial participation).
+
+    The OTA backends normalize by the *full* receive-weight sum
+    (``beta_bar_c`` for the faithful/equivalent folds, the user count
+    for the ideal mean).  With only the `claimed` users transmitting,
+    the matched-filter mean is over the claimed weight sum instead —
+    this returns the per-cluster correction ``full_sum / claimed_sum``
+    (exactly 1.0 at full attendance, 0 where nobody claimed so an
+    empty cluster contributes no update rather than amplified noise).
+
+    weights: static receive weights, e.g. ``topo.beta_own [C, M]``
+    (ones for ``mode="ideal"``); claimed: {0,1} mask, same shape.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    full = jnp.sum(w, axis=axis)
+    got = jnp.sum(w * claimed, axis=axis)
+    return jnp.where(got > 0, full / jnp.where(got > 0, got, 1.0), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# robust cluster folds (masked coordinate statistics a la COMED)
+# ---------------------------------------------------------------------------
+
+def masked_median(x: jax.Array, mask: jax.Array) -> jax.Array:
+    """Coordinate-wise median over the claimed users of each cluster.
+
+    x: per-user estimates ``[C, M, 2N]``; mask: {0,1} ``[C, M]`` —
+    unclaimed users are excluded from the order statistic (sorted to
+    the +inf tail), and the median index follows the *realized*
+    attendance count, so the fold is exact for any per-round mask.
+    Clusters with no claimed user return 0 (no update)."""
+    xs = jnp.sort(jnp.where(mask[..., None] > 0, x, jnp.inf), axis=1)
+    n = jnp.sum(mask > 0, axis=1).astype(jnp.int32)            # [C]
+    lo = jnp.maximum((n - 1) // 2, 0)
+    hi = n // 2
+
+    def take(idx):
+        return jnp.take_along_axis(xs, idx[:, None, None], axis=1)[:, 0]
+
+    med = 0.5 * (take(lo) + take(hi))
+    return jnp.where((n > 0)[:, None], med, 0.0)
+
+
+def masked_trimmed_mean(x: jax.Array, mask: jax.Array,
+                        trim: float = 0.25) -> jax.Array:
+    """Coordinate-wise trimmed mean over the claimed users of each
+    cluster: per coordinate, drop the ``floor(trim * n)`` smallest and
+    largest claimed values and average the rest (``trim < 0.5``).  The
+    trim count follows the realized attendance ``n``, clusters with no
+    claimed user return 0."""
+    if not 0.0 <= trim < 0.5:
+        raise ValueError(f"trim must be in [0, 0.5), got {trim}")
+    M = x.shape[1]
+    xs = jnp.sort(jnp.where(mask[..., None] > 0, x, jnp.inf), axis=1)
+    n = jnp.sum(mask > 0, axis=1).astype(jnp.int32)[:, None]    # [C, 1]
+    k = jnp.floor(np.float32(trim) * n.astype(jnp.float32)).astype(jnp.int32)
+    ranks = jnp.arange(M, dtype=jnp.int32)[None, :]
+    keep = (ranks >= k) & (ranks < n - k)                       # [C, M]
+    kept = jnp.where(keep[..., None], xs, 0.0)
+    cnt = jnp.maximum(n - 2 * k, 1).astype(jnp.float32)
+    return jnp.where(n > 0, jnp.sum(kept, axis=1) / cnt, 0.0)
 
 
 def symbol_power(flat: jax.Array, P) -> jax.Array:

@@ -24,7 +24,6 @@ relay hop (P_IS -> inf).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Sequence
 
 import numpy as np
 
@@ -69,7 +68,6 @@ def _lemma1_total(topo: Topology, bp: BoundParams, eta: float, P: float,
 
     # ---- T1: signal-coefficient deviation (Lemma 6) ----
     r = (b_is[:, None] * b_own) / (bbar * bbar_c[:, None])  # [C, M]
-    rc = r.sum()  # helper
     A_sum = 0.0
     # c1 != c2 contributions: prod terms
     tot_r = r.sum()

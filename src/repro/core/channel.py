@@ -503,3 +503,65 @@ def conventional_ota(key, deltas: jax.Array, topo: Topology, P_t,
     beta = np.asarray(topo.beta_mu_ps, np.float32).reshape(C * M)
     return get_backend(resolve_backend(cfg)).mac(
         key, flat, beta, topo.K_ps, topo.sigma_h2, topo.sigma_z2, P_t, cfg)
+
+
+# ---------------------------------------------------------------------------
+# orthogonalized per-user reception (robust-aggregation substrate)
+# ---------------------------------------------------------------------------
+
+# Backends whose receive fold can be evaluated one user at a time.  The
+# OTA superposition itself CANNOT be robustified in-channel: the analog
+# MAC delivers only the waveform sum P sum_m h_m x_m + z — per-user
+# identity is destroyed at the antenna, and a coordinate median/trim is
+# a nonlinear per-user order statistic, which no matched-filter (or any
+# linear) post-processing of the sum can recover.  Robust folds
+# therefore require *orthogonal* uplink resources (one slot per MU,
+# M x the channel uses), modeled here as M independent single-user MAC
+# hops.  `reference` and `equivalent` support this (their folds are
+# exact / moment-matched at U = 1); the Pallas `slab_kernel` / `fused`
+# paths exist precisely to exploit the U-way superposition (one blocked
+# dispatch over all users, O(block) channel memory) — evaluated
+# per-user they would degenerate into M tiny dispatches with none of
+# their batching advantage, so robust aggregation deliberately rejects
+# them rather than silently running a slow shape the kernels were
+# never tuned for.
+ROBUST_CAPABLE_BACKENDS = ("reference", "equivalent")
+
+
+def orthogonal_cluster_ota(key, deltas: jax.Array, topo: Topology, P_t,
+                           cfg: OTAConfig = OTAConfig()) -> jax.Array:
+    """Per-user orthogonalized cluster hop: each MU transmits to its
+    own IS on a dedicated resource slot (no superposition), giving the
+    IS one noisy estimate *per user* — the substrate robust cluster
+    aggregators (coordinate median / trimmed mean,
+    `repro.core.aggregation`) fold over.
+
+    deltas: [C, M, 2N] -> per-user estimates [C, M, 2N].  Each slot is
+    a U = 1 single-cell MAC hop (eq. 15-17) with the user's own-cluster
+    path gain `topo.beta_own[c, m]`, so E[est_{c,m}] = Delta_{c,m}
+    (the U = 1 normalization divides by the user's own beta).
+    ``mode="ideal"`` returns `deltas` unchanged.  See
+    `ROBUST_CAPABLE_BACKENDS` for why the fused/slab superposition
+    kernels are rejected here.
+    """
+    if cfg.mode == "ideal":
+        return deltas
+    name = resolve_backend(cfg)
+    if name not in ROBUST_CAPABLE_BACKENDS:
+        raise ValueError(
+            f"robust cluster aggregation needs per-user reception; "
+            f"backend {name!r} implements the in-channel OTA "
+            f"superposition, which cannot be robustified (see "
+            f"repro.core.channel.ROBUST_CAPABLE_BACKENDS). Use one of: "
+            f"{', '.join(ROBUST_CAPABLE_BACKENDS)}, or mode='ideal'.")
+    backend = get_backend(name)
+    C, M, _ = deltas.shape
+    beta_own = jnp.asarray(topo.beta_own, jnp.float32)        # [C, M]
+    keys = jax.random.split(key, C * M)
+    keys = keys.reshape((C, M) + keys.shape[1:])
+
+    def one(k, d, b):
+        return backend.mac(k, d[None, :], b[None], topo.K,
+                           topo.sigma_h2, topo.sigma_z2, P_t, cfg)
+
+    return jax.vmap(jax.vmap(one))(keys, deltas, beta_own)

@@ -29,9 +29,8 @@ complex entry is V/2 per real component, which is what we apply to the
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

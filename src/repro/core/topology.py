@@ -10,10 +10,9 @@ normalized distance in [0.5, 3] from the PS; MUs uniformly in an annulus
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from dataclasses import dataclass
+from typing import Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -46,9 +45,17 @@ class Topology:
         return self.d_mu_ps ** (-self.p)
 
     @property
-    def beta_bar_c(self) -> np.ndarray:  # [C]: sum_m beta_{c,m,c}
+    def beta_own(self) -> np.ndarray:  # [C, M]: beta_{c,m,c}
+        """Own-cluster large-scale fading grid (MU (c, m) -> its own IS
+        c) — the receive weights of the cluster matched filter, and the
+        weights the COTAF attendance rescale renormalizes over
+        (`repro.core.aggregation.attendance_rescale`)."""
         b = self.beta_mu_is
-        return np.stack([b[c, :, c].sum() for c in range(self.C)])
+        return np.stack([b[c, :, c] for c in range(self.C)])
+
+    @property
+    def beta_bar_c(self) -> np.ndarray:  # [C]: sum_m beta_{c,m,c}
+        return self.beta_own.sum(axis=1)
 
     @property
     def beta_bar(self) -> float:  # sum_c beta_IS,c

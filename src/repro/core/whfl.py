@@ -19,7 +19,6 @@ FL, the paper's main comparison) and `OTAConfig(mode="ideal")`
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -28,10 +27,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation as agg
-from repro.core.channel import (OTAConfig, cluster_ota, conventional_ota,
-                                global_ota)
+from repro.core.channel import (ROBUST_CAPABLE_BACKENDS, OTAConfig,
+                                cluster_ota, conventional_ota, global_ota,
+                                orthogonal_cluster_ota, resolve_backend)
 from repro.core.topology import Topology, power_schedule
+from repro.fed.clients import ParticipationSchedule
 from repro.optim import Optimizer, apply_updates
+
+CLUSTER_AGGREGATORS = ("mean", "median", "trimmed_mean")
 
 
 @dataclass(frozen=True)
@@ -45,6 +48,42 @@ class WHFLConfig:
     power_slope: float = 1e-2
     power_is_factor: float = 20.0
     power_low: bool = False      # P_t,low = 0.5 P_t (paper's I=1 runs)
+    # per-round MU attendance + behavior (repro.fed.clients); the
+    # default full schedule is an exact no-op (bitwise-identical round
+    # program, pinned by tests/test_participation.py)
+    participation: ParticipationSchedule = field(
+        default_factory=ParticipationSchedule)
+    # cluster-hop fold: "mean" (the paper's OTA superposition) |
+    # "median" | "trimmed_mean" (robust folds over orthogonalized
+    # per-user receptions; reference/equivalent/ideal only)
+    cluster_agg: str = "mean"
+    agg_trim: float = 0.25       # trim fraction for "trimmed_mean"
+
+
+def validate_participation(cfg: WHFLConfig) -> None:
+    """Fail fast on configs the trainer cannot build: unknown cluster
+    aggregator, robust folds in conventional mode (there is no cluster
+    hop to robustify), or robust folds on a superposition backend (see
+    `repro.core.channel.ROBUST_CAPABLE_BACKENDS`)."""
+    if cfg.cluster_agg not in CLUSTER_AGGREGATORS:
+        raise ValueError(
+            f"unknown cluster_agg {cfg.cluster_agg!r}; known: "
+            f"{', '.join(CLUSTER_AGGREGATORS)}")
+    if cfg.cluster_agg == "mean":
+        return
+    if cfg.mode != "whfl":
+        raise ValueError(
+            "robust cluster aggregation (cluster_agg="
+            f"{cfg.cluster_agg!r}) needs the W-HFL cluster hop; "
+            f"mode={cfg.mode!r} has none")
+    if cfg.ota.mode != "ideal":
+        backend = resolve_backend(cfg.ota)
+        if backend not in ROBUST_CAPABLE_BACKENDS:
+            raise ValueError(
+                f"cluster_agg={cfg.cluster_agg!r} needs per-user "
+                f"reception; backend {backend!r} is an in-channel OTA "
+                f"superposition (see repro.core.channel."
+                f"ROBUST_CAPABLE_BACKENDS)")
 
 
 def init_round_state(params, opt: Optimizer, C: int, M: int):
@@ -115,6 +154,22 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
     Y = jnp.asarray(Y)
     local_train = make_local_train(loss_fn, opt, cfg)
 
+    # Participation / robustness gates are PYTHON-level: a full schedule
+    # with the mean fold traces the literally identical round program as
+    # before participation existed (no inserted ops), which is the
+    # bitwise no-op guarantee tests/test_participation.py pins.
+    validate_participation(cfg)
+    schedule = cfg.participation
+    partial = not schedule.is_full
+    robust = cfg.cluster_agg != "mean"
+    tx_base = jnp.asarray(schedule.tx_base(C, M)) if partial else None
+    # receive weights the attendance rescale renormalizes over: the
+    # ideal mean weighs users uniformly, the OTA folds by own-beta
+    rx_w = (np.ones((C, M), np.float32) if cfg.ota.mode == "ideal"
+            else np.asarray(topo.beta_own, np.float32))
+    rx_w_conv = (np.ones((C, M), np.float32) if cfg.ota.mode == "ideal"
+                 else np.asarray(topo.beta_mu_ps, np.float32))
+
     def users_train(theta_IS, opt_state, key, step):
         """theta_IS: [C]-stacked cluster models -> flat deltas [C,M,2N]."""
         keys = jax.random.split(key, C * M).reshape(C, M, 2)
@@ -125,18 +180,44 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
         flat = jax.vmap(jax.vmap(lambda d: agg.flatten(spec, d)))(deltas)
         return flat, opt_state
 
+    def cluster_fold(k2, flat, claimed, P_t):
+        """Cluster-hop receive fold: the paper's OTA superposition mean
+        (with COTAF attendance rescale under partial participation) or
+        a robust masked fold over orthogonalized per-user receptions."""
+        if robust:
+            mask = (claimed if partial
+                    else jnp.ones((C, M), jnp.float32))
+            per_user = orthogonal_cluster_ota(k2, flat, topo, P_t, cfg.ota)
+            if cfg.cluster_agg == "median":
+                return agg.masked_median(per_user, mask)
+            return agg.masked_trimmed_mean(per_user, mask, cfg.agg_trim)
+        est = cluster_ota(k2, flat, topo, P_t, cfg.ota)  # [C, 2N]
+        if partial:
+            est = est * agg.attendance_rescale(rx_w, claimed)[:, None]
+        return est
+
     def round_fn(state, key, P_t, P_is_t):
         if trace_counter is not None:
             trace_counter[0] += 1  # python side effect: runs at trace time
         theta = state["theta"]
         step = state["t"]
+        if partial:
+            claimed = schedule.present(step, C, M)
+            mult = claimed * tx_base
+        else:
+            claimed = mult = None
 
         if cfg.mode == "conventional":
             theta_IS = jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (C,) + x.shape), theta)
             k1, k2 = jax.random.split(key)
             flat, opt_state = users_train(theta_IS, state["opt"], k1, step)
+            if partial:
+                flat = agg.cotaf_precode(flat, mult)
             est = conventional_ota(k2, flat, topo, P_t, cfg.ota)
+            if partial:
+                est = est * agg.attendance_rescale(
+                    rx_w_conv.reshape(-1), claimed.reshape(-1))
             theta = apply_updates(theta, agg.unflatten(spec, est))
             p_edge = agg.symbol_power(flat, P_t)
             return {**state, "theta": theta, "opt": opt_state,
@@ -154,7 +235,9 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
             th_IS, opt_state, p_acc = carry
             k1, k2 = jax.random.split(k)
             flat, opt_state = users_train(th_IS, opt_state, k1, step)
-            est = cluster_ota(k2, flat, topo, P_t, cfg.ota)  # [C, 2N]
+            if partial:
+                flat = agg.cotaf_precode(flat, mult)
+            est = cluster_fold(k2, flat, claimed, P_t)      # [C, 2N]
             th_IS = jax.vmap(
                 lambda th, e: apply_updates(th, agg.unflatten(spec, e))
             )(th_IS, est)

@@ -12,8 +12,6 @@ trainer can vmap over (cluster, user).
 """
 from __future__ import annotations
 
-from typing import Tuple
-
 import numpy as np
 
 

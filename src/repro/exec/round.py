@@ -62,12 +62,15 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+import numpy as np
+
 from repro.core import aggregation as agg
 from repro.core.channel import (_cluster_geometry, _seed_words, cluster_ota,
                                 conventional_ota, global_ota,
-                                resolve_backend)
+                                orthogonal_cluster_ota, resolve_backend)
 from repro.core.topology import Topology
-from repro.core.whfl import WHFLConfig, make_local_train
+from repro.core.whfl import (WHFLConfig, make_local_train,
+                             validate_participation)
 from repro.exec.mesh import pad_plan_for
 from repro.kernels import fused_mac
 # the executor's symbol padding must agree with the kernel's rounding
@@ -106,6 +109,22 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
     local_train = make_local_train(loss_fn, opt, cfg)
     interpret = jax.default_backend() != "tpu"
 
+    # Participation / robustness gates mirror the single engine's
+    # Python-level branches (repro.core.whfl.make_round_fn): a full
+    # schedule with the mean fold builds the identical pre-participation
+    # program, and every participation op below composes with the pad
+    # plan (a sampled-out user is a pad slot drawn per round: tx
+    # multiplier 0, so its transmission never exists on any mesh).
+    validate_participation(cfg)
+    schedule = cfg.participation
+    partial = not schedule.is_full
+    robust = cfg.cluster_agg != "mean"
+    tx_base = jnp.asarray(schedule.tx_base(C, M)) if partial else None
+    rx_w = (np.ones((C, M), np.float32) if cfg.ota.mode == "ideal"
+            else np.asarray(topo.beta_own, np.float32))
+    rx_w_conv = (np.ones((C, M), np.float32) if cfg.ota.mode == "ideal"
+                 else np.asarray(topo.beta_mu_ps, np.float32))
+
     backend = ("" if cfg.ota.mode == "ideal" else resolve_backend(cfg.ota))
     fused_cluster_hop = (cfg.mode != "conventional" and backend == "fused")
     if fused_cluster_hop:
@@ -140,7 +159,8 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
             lambda x: jax.lax.dynamic_slice_in_dim(x, ci * C_loc, C_loc, 0),
             tree)
 
-    def users_train(theta_IS, opt_loc, key, step, X_loc, Y_loc, ci, ui):
+    def users_train(theta_IS, opt_loc, key, step, X_loc, Y_loc, ci, ui,
+                    mult_p=None):
         """Local training of this shard's users.
 
         theta_IS: replicated [Cp]-stacked cluster models; opt/X/Y: the
@@ -152,26 +172,48 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
         trains from the same key on every mesh (and every real delta is
         bitwise the single-engine delta; inactive deltas are computed
         but never transmitted).
+
+        `mult_p` (padded [Cp, Mp], participation runs only): the round's
+        COTAF transmit multipliers.  Each user's flat delta is precoded
+        *before* its energy is computed inside the per-user map, the
+        same elementwise multiply the single engine batches
+        (`agg.cotaf_precode`), so precoded symbols AND energies stay
+        bitwise cross-engine; padded slots carry multiplier 0 (a
+        sampled-out user is exactly a pad slot).
         """
         keys = jax.random.split(key, C * M).reshape(C, M, 2)
         keys = plan.pad_users(keys)                     # [Cp, Mp, 2]
         keys_loc = jax.lax.dynamic_slice(
             keys, (ci * C_loc, ui * M_loc, 0), (C_loc, M_loc, 2))
         theta_loc = _slice_c(theta_IS, ci)
+        if partial:
+            mult_loc = jax.lax.dynamic_slice(
+                mult_p, (ci * C_loc, ui * M_loc), (C_loc, M_loc))
 
         def one_cluster(args):
-            th_c, opt_c, x_c, y_c, k_c = args
+            if partial:
+                th_c, opt_c, x_c, y_c, k_c, m_c = args
+            else:
+                th_c, opt_c, x_c, y_c, k_c = args
 
             def one_user(a):
-                st, x, y, k = a
+                if partial:
+                    st, x, y, k, m = a
+                else:
+                    st, x, y, k = a
                 delta, st = local_train(th_c, st, x, y, k, step)
                 flat = agg.flatten(spec, delta)
+                if partial:
+                    flat = flat * m
                 return flat, st, agg.user_energy(flat)
 
-            return jax.lax.map(one_user, (opt_c, x_c, y_c, k_c))
+            xs = ((opt_c, x_c, y_c, k_c, m_c) if partial
+                  else (opt_c, x_c, y_c, k_c))
+            return jax.lax.map(one_user, xs)
 
-        flat, opt_loc, pw = jax.lax.map(
-            one_cluster, (theta_loc, opt_loc, X_loc, Y_loc, keys_loc))
+        xs = ((theta_loc, opt_loc, X_loc, Y_loc, keys_loc, mult_loc)
+              if partial else (theta_loc, opt_loc, X_loc, Y_loc, keys_loc))
+        flat, opt_loc, pw = jax.lax.map(one_cluster, xs)
         return flat, opt_loc, pw
 
     def edge_power(pw_loc, P_t):
@@ -230,16 +272,40 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
         est_im = collect(y_im / topo.K / scale)
         return jnp.concatenate([est_re, est_im], axis=-1)   # [Cp, 2N]
 
-    def cluster_estimate(key, flat_loc, P_t, ci, ui):
+    def cluster_estimate(key, flat_loc, P_t, ci, ui, claimed=None):
         """Replicated [Cp, 2N] cluster estimate; real rows == the
-        single-engine `cluster_ota`, inactive rows zero."""
+        single-engine cluster fold, inactive rows zero (padded with a
+        1.0 rescale, so they stay exactly zero under participation).
+
+        Mirrors `repro.core.whfl.make_round_fn`'s `cluster_fold`: OTA
+        superposition mean (+ COTAF attendance rescale under partial
+        participation) or a robust masked fold over orthogonalized
+        per-user receptions (small backends only, computed replicated
+        on the gathered real block — the literal single-engine
+        program, hence bitwise cross-engine/mesh)."""
         if fused_cluster_hop:
-            return fused_cluster_estimate(key, flat_loc, P_t, ci, ui)
+            est = fused_cluster_estimate(key, flat_loc, P_t, ci, ui)
+            if partial:
+                resc = agg.attendance_rescale(rx_w, claimed)    # [C]
+                est = est * plan.pad_rx(resc, fill=1.0)[:, None]
+            return est
+        flat = _gather_cm(flat_loc)
+        if robust:
+            mask = (claimed if partial
+                    else jnp.ones((C, M), jnp.float32))
+            per_user = orthogonal_cluster_ota(key, flat, topo, P_t,
+                                              cfg.ota)
+            if cfg.cluster_agg == "median":
+                return plan.pad_rx(agg.masked_median(per_user, mask))
+            return plan.pad_rx(
+                agg.masked_trimmed_mean(per_user, mask, cfg.agg_trim))
         # small/closed-form backends: gather the real block and compute
         # replicated — the literal single-engine hop on identical input
         # (inactive clusters receive a zero-padded estimate row)
-        return plan.pad_rx(cluster_ota(key, _gather_cm(flat_loc), topo,
-                                       P_t, cfg.ota))
+        est = cluster_ota(key, flat, topo, P_t, cfg.ota)
+        if partial:
+            est = est * agg.attendance_rescale(rx_w, claimed)[:, None]
+        return plan.pad_rx(est)
 
     # -- the round body ------------------------------------------------------
 
@@ -250,15 +316,27 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
         ui = jax.lax.axis_index("user")
         theta = state["theta"]
         step = state["t"]
+        if partial:
+            # replicated on every shard: the mask is a pure function of
+            # (schedule, step) through the counter PRNG, so all shards
+            # (and the single engine) draw the identical [C, M] grid
+            claimed = schedule.present(step, C, M)
+            mult_p = plan.pad_users(claimed * tx_base)      # [Cp, Mp]
+        else:
+            claimed = mult_p = None
         theta_IS = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (Cp,) + x.shape), theta)
 
         if cfg.mode == "conventional":
             k1, k2 = jax.random.split(key)
             flat_loc, opt_state, pw = users_train(
-                theta_IS, state["opt"], k1, step, X_loc, Y_loc, ci, ui)
+                theta_IS, state["opt"], k1, step, X_loc, Y_loc, ci, ui,
+                mult_p)
             est = conventional_ota(k2, _gather_cm(flat_loc), topo, P_t,
                                    cfg.ota)
+            if partial:
+                est = est * agg.attendance_rescale(
+                    rx_w_conv.reshape(-1), claimed.reshape(-1))
             theta = apply_updates(theta, agg.unflatten(spec, est))
             return {**state, "theta": theta, "opt": opt_state,
                     "t": step + 1,
@@ -272,8 +350,9 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
             th_IS, opt_state, p_acc = carry
             k1, k2 = jax.random.split(k)
             flat_loc, opt_state, pw = users_train(
-                th_IS, opt_state, k1, step, X_loc, Y_loc, ci, ui)
-            est = cluster_estimate(k2, flat_loc, P_t, ci, ui)    # [Cp, 2N]
+                th_IS, opt_state, k1, step, X_loc, Y_loc, ci, ui, mult_p)
+            est = cluster_estimate(k2, flat_loc, P_t, ci, ui,
+                                   claimed)                  # [Cp, 2N]
             th_IS = jax.vmap(
                 lambda th, e: apply_updates(th, agg.unflatten(spec, e))
             )(th_IS, est)

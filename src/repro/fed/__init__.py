@@ -1,3 +1,6 @@
-from repro.fed.clients import ClientPool, ClientState, make_pool
+from repro.fed.clients import (PARTICIPATION_KINDS, ClientPool, ClientState,
+                               ParticipationSchedule, counter_uniform,
+                               make_pool)
 
-__all__ = ["ClientPool", "ClientState", "make_pool"]
+__all__ = ["ClientPool", "ClientState", "ParticipationSchedule",
+           "PARTICIPATION_KINDS", "counter_uniform", "make_pool"]

@@ -3,13 +3,168 @@
 Wraps the partitioned datasets into a `ClientPool` with per-client
 sampling state, participation schedules and cluster membership — the
 orchestration layer between data partitioners and the W-HFL trainer.
+
+`ParticipationSchedule` is the per-round attendance axis: which MUs
+transmit in a given global round, and how (honestly, as free riders,
+or byzantine).  The schedule is *static configuration* — the per-round
+``[C, M]`` mask is a pure function of the round index drawn from the
+same counter PRNG family as the fused channel kernel
+(threefry2x32 keyed on the schedule seed, counter = (round, user)), so
+it is identical on every execution engine, every mesh shape and every
+seed-batch mode: participation composes with the PR 5 inactive-user
+padding (a sampled-out user IS a pad slot, just drawn per round) and
+never perturbs the bitwise engine/mesh-invariance theorems.  The
+trainer consumes it through `WHFLConfig.participation`
+(`repro.core.whfl`); `ClientPool.mark_round` consumes realized masks
+for host-side attendance accounting.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
+
+# the counter PRNG the fused channel kernel draws from — participation
+# masks use the same generator (distinct keys) so schedules are
+# blocking-, mesh- and engine-invariant by construction
+from repro.kernels.fused_mac import _threefry2x32
+
+
+_U24 = np.float32(2.0 ** -24)
+
+
+def counter_uniform(seed: int, t, n: int) -> jnp.ndarray:
+    """``n`` uniform [0, 1) float32 draws from the counter PRNG, keyed
+    on ``seed`` with counter words ``(t, 0..n-1)``.
+
+    ``t`` may be a traced round index (the chunked driver's scan
+    carries it on device); the draws depend only on ``(seed, t, i)`` —
+    never on batch sizes, block shapes or device placement — which is
+    what keeps participation masks bitwise identical across engines,
+    meshes and drivers."""
+    k0 = jnp.uint32(np.uint32(seed & 0xFFFFFFFF))
+    k1 = jnp.uint32(np.uint32((seed >> 32) & 0xFFFFFFFF) ^ np.uint32(0x3C6EF372))
+    x0 = jnp.broadcast_to(jnp.asarray(t).astype(jnp.uint32), (n,))
+    x1 = jnp.arange(n, dtype=jnp.uint32)
+    b0, _ = _threefry2x32(k0, k1, x0, x1)
+    return (b0 >> 8).astype(jnp.float32) * _U24
+
+
+PARTICIPATION_KINDS = ("full", "bernoulli", "stragglers")
+
+
+@dataclass(frozen=True)
+class ParticipationSchedule:
+    """Per-round MU attendance + behavior flags (static config).
+
+    kind:
+      - ``"full"`` — every MU transmits every round (the paper's
+        assumption; with no flags set this is the exact no-op and the
+        trainer inserts *no* participation ops at all).
+      - ``"bernoulli"`` — each MU independently transmits with
+        probability `rate` each round; draws come from `counter_uniform`
+        keyed on `seed` with counter ``(round t, user c*M+m)``.
+      - ``"stragglers"`` — the leading ``ceil(straggler_frac * M)``
+        users of every cluster are stragglers: they only manage to
+        transmit on rounds with ``t % straggler_every == 0``
+        (deterministic, worst-case-periodic attendance).
+
+    Behavior flags (orthogonal to the sampling kind; deterministic
+    placement so scenarios are reproducible without extra state):
+      - the trailing `n_byzantine` users of every cluster are byzantine
+        — when present they transmit ``-byzantine_scale * delta``
+        (sign-flipping attack, FLmedical's COMED threat model);
+      - the `n_free_riders` users just before them transmit nothing but
+        still *claim* attendance, so the receiver's normalization
+        counts them (the free-riding dilution effect).
+
+    A user that the schedule samples OUT is known absent at the
+    receiver (it never claimed the round), so COTAF-style attendance
+    renormalization applies (`repro.core.aggregation`); byzantine and
+    free-riding users DO claim, and only robust aggregation
+    (`WHFLConfig.cluster_agg`) defends against them.
+    """
+
+    kind: str = "full"
+    rate: float = 1.0             # bernoulli attendance probability
+    seed: int = 17                # counter-PRNG key (static)
+    straggler_every: int = 4      # stragglers attend every k-th round
+    straggler_frac: float = 0.25  # leading fraction of users straggling
+    n_byzantine: int = 0          # per-cluster byzantine tail users
+    byzantine_scale: float = 1.0  # byzantine transmit -scale * delta
+    n_free_riders: int = 0        # per-cluster free riders (claim, tx 0)
+
+    def __post_init__(self):
+        if self.kind not in PARTICIPATION_KINDS:
+            raise ValueError(
+                f"unknown participation kind {self.kind!r}; known: "
+                f"{', '.join(PARTICIPATION_KINDS)}")
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"rate must be in [0, 1], got {self.rate}")
+        if self.straggler_every < 1:
+            raise ValueError("straggler_every must be >= 1")
+        if min(self.n_byzantine, self.n_free_riders) < 0:
+            raise ValueError("flag counts must be >= 0")
+
+    @property
+    def is_full(self) -> bool:
+        """True iff the schedule is the exact no-op: the trainer then
+        builds the identical round program it built before participation
+        existed (bitwise guarantee, pinned in tests)."""
+        return (self.kind == "full" and self.n_byzantine == 0
+                and self.n_free_riders == 0)
+
+    # -- static flags --------------------------------------------------------
+
+    def flags(self, C: int, M: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(byzantine, free_rider) float32 ``[C, M]`` indicator grids.
+        Flags occupy the tail users of every cluster (byzantine last,
+        free riders just before); counts clamp to M."""
+        byz = np.zeros((C, M), np.float32)
+        free = np.zeros((C, M), np.float32)
+        nb = min(self.n_byzantine, M)
+        nf = min(self.n_free_riders, M - nb)
+        if nb:
+            byz[:, M - nb:] = 1.0
+        if nf:
+            free[:, M - nb - nf: M - nb] = 1.0
+        return byz, free
+
+    def tx_base(self, C: int, M: int) -> np.ndarray:
+        """Static per-user transmit multiplier ``[C, M]``: honest users
+        1, free riders 0, byzantine ``-byzantine_scale``.  The realized
+        per-round multiplier is ``present(t) * tx_base``."""
+        byz, free = self.flags(C, M)
+        return ((1.0 - byz - free)
+                + byz * np.float32(-self.byzantine_scale)).astype(np.float32)
+
+    # -- the per-round mask (traceable in t) ---------------------------------
+
+    def present(self, t, C: int, M: int) -> jnp.ndarray:
+        """Attendance mask ``[C, M]`` float32 in {0, 1} for round ``t``
+        (``t`` may be traced).  Pure in ``(self, t)`` — identical on
+        every engine, mesh and driver."""
+        if self.kind == "full":
+            return jnp.ones((C, M), jnp.float32)
+        if self.kind == "stragglers":
+            n_s = int(np.ceil(self.straggler_frac * M))
+            strag = np.zeros((C, M), np.float32)
+            strag[:, :n_s] = 1.0
+            on = (jnp.asarray(t).astype(jnp.int32)
+                  % self.straggler_every) == 0
+            return jnp.where(on, jnp.ones((C, M), jnp.float32),
+                             1.0 - jnp.asarray(strag))
+        # bernoulli
+        u = counter_uniform(self.seed, t, C * M).reshape(C, M)
+        return (u < np.float32(self.rate)).astype(jnp.float32)
+
+    def history(self, T: int, C: int, M: int) -> np.ndarray:
+        """Host-side realized attendance ``[T, C, M]`` for rounds
+        0..T-1 (e.g. for `ClientPool.mark_round` accounting)."""
+        return np.stack([np.asarray(self.present(t, C, M))
+                         for t in range(T)])
 
 
 @dataclass
@@ -44,9 +199,22 @@ class ClientPool:
     def client(self, c: int, m: int) -> ClientState:
         return self.clients[c * self.M + m]
 
-    def mark_round(self):
+    def mark_round(self, mask: Optional[np.ndarray] = None):
+        """Account one global round of attendance.  With no `mask`
+        every client participated (the paper's full-attendance
+        assumption); with a ``[C, M]`` mask (e.g. one row of
+        `ParticipationSchedule.history`) only clients whose entry is
+        nonzero are counted."""
+        if mask is None:
+            for cl in self.clients:
+                cl.rounds_participated += 1
+            return
+        m = np.asarray(mask)
+        if m.shape != (self.C, self.M):
+            raise ValueError(
+                f"mask shape {m.shape} != (C, M) = {(self.C, self.M)}")
         for cl in self.clients:
-            cl.rounds_participated += 1
+            cl.rounds_participated += int(m[cl.cluster, cl.index] != 0)
 
     def label_histogram(self, n_classes: int = 10) -> np.ndarray:
         """[C, M, n_classes] label counts — used to verify the paper's

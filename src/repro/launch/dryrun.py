@@ -32,7 +32,7 @@ from repro.configs.archs import ASSIGNED
 from repro.launch import hlo as hlo_mod
 from repro.launch.mesh import make_production_mesh
 from repro.launch.serve import (build_decode_step, build_prefill_step,
-                                cache_specs, cache_shardings)
+                                cache_specs)
 from repro.launch.train import (TrainConfig, abstract_state,
                                 build_fused_train_step, build_train_step,
                                 make_batch)

@@ -19,7 +19,6 @@ tests/test_hlo_cost.py.
 from __future__ import annotations
 
 import re
-from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 

@@ -8,10 +8,9 @@ import; smoke tests must keep seeing 1 device).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh
 
 # `AxisType` only exists on newer jax (>= 0.5); older installs get the

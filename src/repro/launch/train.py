@@ -24,10 +24,8 @@ we expose both).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,8 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig, InputShape
 from repro.core.dist import (DistGeom, OTADistConfig, cluster_hop,
-                             fused_whfl_aggregate, global_hop, uniform_geom,
-                             whfl_aggregate)
+                             global_hop, uniform_geom, whfl_aggregate)
 from repro.launch.mesh import mesh_counts, refine_mesh
 from repro.models import lm
 from repro.nn.core import split_params

@@ -9,7 +9,7 @@ Pure JAX init/apply in the same Px convention as the big models.
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

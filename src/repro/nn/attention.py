@@ -8,13 +8,12 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.nn import core
-from repro.nn.core import Px
 from repro.nn.rope import apply_rope
 from repro.sharding import logical
 
@@ -211,7 +210,6 @@ def decode(p, x, cache, cfg: AttnConfig):
     of tokens already in the cache}.  With a sliding window, S == window
     and slots are written round-robin.
     """
-    B = x.shape[0]
     S = cache["k"].shape[1]
     pos = cache["pos"]  # [B]
     q, k, v = _qkv(p, x, pos[:, None], cfg)

@@ -15,7 +15,6 @@ cannot be sharded without cutting across the z/x/B/C/dt boundaries.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -91,7 +90,6 @@ def _ssd_chunked(x, dt, A, Bc, Cc, h0, cfg: SSMConfig):
     Returns (y [B, L, H, P], h_final).
     """
     Bsz, L, H, Pd = x.shape
-    N = Bc.shape[-1]
     Q = min(cfg.chunk, L)
     assert L % Q == 0, f"seq {L} not divisible by chunk {Q}"
     nc = L // Q

@@ -9,7 +9,7 @@ Learning rates may be floats or callables of the (traced) step.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, NamedTuple, Union
+from typing import Callable, Union
 
 import jax
 import jax.numpy as jnp

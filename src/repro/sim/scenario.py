@@ -15,8 +15,8 @@ the Fig. 2 / Fig. 3 definitions at the bottom for the idiom.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Tuple
+from dataclasses import dataclass
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.core import OTAConfig, random_topology, uniform_topology
 from repro.core.topology import Topology
 from repro.core.whfl import WHFLConfig
+from repro.fed.clients import ParticipationSchedule
 from repro.data import (get_partitioner, synthetic_cifar, synthetic_mnist)
 from repro.models.paper_models import (cifar_apply, cifar_init, mnist_apply,
                                        mnist_init)
@@ -77,6 +78,19 @@ class Scenario:
     n_test: int = 2000
     data_seed: int = 0               # partition + geometry seed
     eval_every: int = 1
+    # participation & robustness (repro.fed.clients /
+    # repro.core.whfl.CLUSTER_AGGREGATORS); the defaults are the
+    # paper's full-attendance mean — an exact no-op
+    participation: str = "full"      # "full" | "bernoulli" | "stragglers"
+    participation_rate: float = 1.0  # bernoulli attendance probability
+    participation_seed: int = 17
+    straggler_every: int = 4
+    straggler_frac: float = 0.25
+    n_byzantine: int = 0             # per-cluster byzantine tail users
+    byzantine_scale: float = 1.0
+    n_free_riders: int = 0
+    cluster_agg: str = "mean"        # "mean" | "median" | "trimmed_mean"
+    agg_trim: float = 0.25
 
     # -- derived ------------------------------------------------------------
 
@@ -84,12 +98,25 @@ class Scenario:
     def rounds(self) -> int:
         return max(1, self.total_IT // self.I)
 
+    def participation_schedule(self) -> ParticipationSchedule:
+        return ParticipationSchedule(
+            kind=self.participation, rate=self.participation_rate,
+            seed=self.participation_seed,
+            straggler_every=self.straggler_every,
+            straggler_frac=self.straggler_frac,
+            n_byzantine=self.n_byzantine,
+            byzantine_scale=self.byzantine_scale,
+            n_free_riders=self.n_free_riders)
+
     def whfl_config(self) -> WHFLConfig:
         return WHFLConfig(tau=self.tau, I=self.I, batch=self.batch,
                           mode=self.mode,
                           ota=OTAConfig(mode=self.ota_mode,
                                         backend=self.ota_backend),
-                          power_low=(self.I == 1))
+                          power_low=(self.I == 1),
+                          participation=self.participation_schedule(),
+                          cluster_agg=self.cluster_agg,
+                          agg_trim=self.agg_trim)
 
     def make_topology(self) -> Topology:
         if self.topology == "uniform":
@@ -193,6 +220,39 @@ _register_family(Scenario(name="fig3_cifar", dataset="cifar",
                           partition="iid", tau=5, batch=128, lr=1e-3,
                           sigma_z2=1.0, n_test=1000),
                  baselines=True)
+
+# Participation & robustness family — the Fig. 2 i.i.d. condition under
+# realistic attendance (per-round Bernoulli dropout, periodic
+# stragglers) and adversarial behavior (sign-flipping byzantine users),
+# with optional robust cluster folds.  All draws come from the counter
+# PRNG (repro.fed.clients), so every scenario here runs bitwise
+# identically on both execution engines and every mesh shape; the
+# `_median` companions swap the cluster fold for the coordinate median
+# over orthogonalized per-user receptions (repro.core.channel.
+# orthogonal_cluster_ota — reference/equivalent/ideal backends only).
+PARTICIPATION_FAMILIES = ("fig2_drop10", "fig2_drop50", "fig2_straggler",
+                          "fig2_byzantine1", "fig2_byzantine3",
+                          "fig2_byzantine1_median",
+                          "fig2_byzantine3_median")
+
+_fig2_part = Scenario(name="fig2_iid", dataset="mnist", partition="iid",
+                      tau=1, sigma_z2=10.0)
+register_scenario(_fig2_part.replace(
+    name="fig2_drop10", participation="bernoulli",
+    participation_rate=0.9))
+register_scenario(_fig2_part.replace(
+    name="fig2_drop50", participation="bernoulli",
+    participation_rate=0.5))
+register_scenario(_fig2_part.replace(
+    name="fig2_straggler", participation="stragglers",
+    straggler_frac=0.4, straggler_every=4))
+for _nb in (1, 3):
+    register_scenario(_fig2_part.replace(
+        name=f"fig2_byzantine{_nb}", n_byzantine=_nb,
+        byzantine_scale=2.0))
+    register_scenario(_fig2_part.replace(
+        name=f"fig2_byzantine{_nb}_median", n_byzantine=_nb,
+        byzantine_scale=2.0, cluster_agg="median"))
 
 # Scale family — beyond-paper user counts through the fused channel
 # backend (channels generated inside the kernel; no [U, K, N] slab, so

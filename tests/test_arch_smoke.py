@@ -5,8 +5,6 @@ For each assigned architecture: instantiate the REDUCED variant
 on CPU, assert output shapes and no NaNs; and check decode-vs-prefill
 consistency of the cache implementations.
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

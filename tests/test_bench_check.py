@@ -206,3 +206,44 @@ def test_reads_both_schemas_and_multiple_fresh_docs(write):
     b = write("base.json",
               baseline_doc([rec("s1", rps=10.0), rec("s2", rps=10.0)]))
     assert bench_check.main([f1, f2, "--baseline", b]) == 0
+
+
+# ---------------------------------------------------------------------------
+# --append: the perf time series
+# ---------------------------------------------------------------------------
+
+def test_append_creates_and_accumulates(write, tmp_path):
+    traj = str(tmp_path / "traj.json")
+    args = ["--baseline", write("b.json", baseline_doc([rec(rps=10.0)])),
+            "--append", traj]
+    f = write("f.json", sweep_doc([rec(rps=10.0)]))
+    assert bench_check.main([f, *args, "--run-id", "one"]) == 0
+    assert bench_check.main([f, *args, "--run-id", "two"]) == 0
+    doc = json.loads(open(traj).read())
+    assert doc["schema"] == bench_check.TRAJECTORY_SCHEMA
+    assert [r["run_id"] for r in doc["runs"]] == ["one", "two"]
+    r0 = doc["runs"][0]
+    assert r0["passed"] is True and r0["timestamp"]
+    assert r0["records"] == [{
+        "scenario": "sc", "exec": "single", "driver": "stepwise",
+        "mesh": None, "rounds_per_sec": 10.0, "dispatches": None}]
+
+
+def test_append_records_failing_runs_and_still_fails(write, tmp_path):
+    # the trajectory must record reality even when the gate trips, and
+    # appending must not mask the non-zero exit code
+    traj = str(tmp_path / "traj.json")
+    f = write("f.json", sweep_doc([rec(rps=1.0)]))
+    b = write("b.json", baseline_doc([rec(rps=10.0)]))
+    assert bench_check.main([f, "--baseline", b, "--append", traj]) == 1
+    doc = json.loads(open(traj).read())
+    assert len(doc["runs"]) == 1 and doc["runs"][0]["passed"] is False
+
+
+def test_append_refuses_non_trajectory_target(write, tmp_path):
+    # pointing --append at a sweep/baseline doc must not clobber it
+    f = write("f.json", sweep_doc([rec(rps=10.0)]))
+    b = write("b.json", baseline_doc([rec(rps=10.0)]))
+    with pytest.raises(SystemExit, match="refusing to overwrite"):
+        bench_check.main([f, "--baseline", b, "--append", b])
+    assert json.loads(open(b).read())["schema"] == bench_check.BASELINE_SCHEMA

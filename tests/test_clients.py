@@ -1,0 +1,223 @@
+"""`repro.fed.clients`: ClientPool invariants, participation schedules
+and the counter-PRNG attendance masks.
+
+The hypothesis property at the bottom pins the tentpole guarantee of
+partial participation: a sampled-out user's gradient NEVER reaches any
+hop — its COTAF-precoded transmission is exactly zero, so replacing its
+delta with arbitrary garbage cannot perturb the fold output by a single
+bit (``x * 0 == 0`` exactly for finite float32 x).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+from repro.fed.clients import (PARTICIPATION_KINDS, ClientPool,
+                               ParticipationSchedule, counter_uniform,
+                               make_pool)
+
+
+def _pool(C=2, M=3, n=4):
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((C, M, n, 5)).astype(np.float32)
+    Y = rng.integers(0, 10, (C, M, n))
+    return ClientPool(X=X, Y=Y)
+
+
+# ---------------------------------------------------------------------------
+# ClientPool invariants
+# ---------------------------------------------------------------------------
+
+def test_pool_invariants():
+    pool = _pool(C=2, M=3, n=4)
+    assert (pool.C, pool.M) == (2, 3)
+    assert len(pool.clients) == 6
+    for c in range(2):
+        for m in range(3):
+            cl = pool.client(c, m)
+            assert (cl.cluster, cl.index) == (c, m)
+            assert cl.n_samples == 4
+            assert cl.rounds_participated == 0
+    hist = pool.label_histogram()
+    assert hist.shape == (2, 3, 10)
+    assert (hist.sum(axis=-1) == 4).all()   # every sample counted once
+
+
+def test_make_pool_runs_partitioner():
+    def part(seed, X, Y, C, M):
+        n = len(X) // (C * M)
+        return (X[: C * M * n].reshape(C, M, n, -1),
+                Y[: C * M * n].reshape(C, M, n))
+
+    rng = np.random.default_rng(1)
+    pool = make_pool(part, 0, rng.standard_normal((24, 5)),
+                     rng.integers(0, 10, 24), C=2, M=3)
+    assert (pool.C, pool.M) == (2, 3)
+    assert pool.client(1, 2).n_samples == 4
+
+
+def test_mark_round_full_and_masked():
+    pool = _pool(C=2, M=3)
+    pool.mark_round()                      # no mask: everyone
+    mask = np.zeros((2, 3))
+    mask[0, 1] = 1.0
+    mask[1, 2] = 1.0
+    pool.mark_round(mask)
+    got = {(cl.cluster, cl.index): cl.rounds_participated
+           for cl in pool.clients}
+    assert got[(0, 1)] == 2 and got[(1, 2)] == 2
+    assert sum(got.values()) == 6 + 2
+    with pytest.raises(ValueError, match="mask shape"):
+        pool.mark_round(np.ones((3, 2)))
+
+
+def test_bernoulli_accounting_matches_history():
+    """`rounds_participated` under a Bernoulli schedule equals the
+    per-user column sums of `ParticipationSchedule.history`."""
+    C, M, T = 3, 4, 25
+    pool = _pool(C=C, M=M)
+    sched = ParticipationSchedule(kind="bernoulli", rate=0.6, seed=5)
+    hist = sched.history(T, C, M)
+    for t in range(T):
+        pool.mark_round(hist[t])
+    for cl in pool.clients:
+        assert cl.rounds_participated == int(
+            hist[:, cl.cluster, cl.index].sum())
+    # attendance concentrates around the rate
+    assert 0.4 < hist.mean() < 0.8
+
+
+# ---------------------------------------------------------------------------
+# ParticipationSchedule
+# ---------------------------------------------------------------------------
+
+def test_schedule_validation():
+    with pytest.raises(ValueError, match="unknown participation kind"):
+        ParticipationSchedule(kind="sometimes")
+    with pytest.raises(ValueError, match="rate"):
+        ParticipationSchedule(kind="bernoulli", rate=1.5)
+    with pytest.raises(ValueError, match="straggler_every"):
+        ParticipationSchedule(kind="stragglers", straggler_every=0)
+    with pytest.raises(ValueError, match="counts"):
+        ParticipationSchedule(n_byzantine=-1)
+    assert ParticipationSchedule().is_full
+    assert ParticipationSchedule(kind="bernoulli", rate=1.0).is_full is False
+    assert ParticipationSchedule(n_free_riders=1).is_full is False
+
+
+def test_flags_and_tx_base_placement():
+    s = ParticipationSchedule(n_byzantine=1, n_free_riders=2,
+                              byzantine_scale=2.5)
+    byz, free = s.flags(2, 5)
+    # byzantine occupy the tail, free riders sit just before them
+    np.testing.assert_array_equal(byz, [[0, 0, 0, 0, 1]] * 2)
+    np.testing.assert_array_equal(free, [[0, 0, 1, 1, 0]] * 2)
+    np.testing.assert_array_equal(
+        s.tx_base(2, 5), np.asarray([[1, 1, 0, 0, -2.5]] * 2, np.float32))
+    # counts clamp to M
+    byz, free = ParticipationSchedule(n_byzantine=7, n_free_riders=7).flags(
+        1, 4)
+    assert byz.sum() == 4 and free.sum() == 0
+
+
+def test_full_and_straggler_masks():
+    full = ParticipationSchedule()
+    np.testing.assert_array_equal(np.asarray(full.present(3, 2, 3)),
+                                  np.ones((2, 3)))
+    s = ParticipationSchedule(kind="stragglers", straggler_frac=0.4,
+                              straggler_every=3)
+    # ceil(0.4 * 5) = 2 leading users straggle; attend iff t % 3 == 0
+    np.testing.assert_array_equal(np.asarray(s.present(0, 2, 5)),
+                                  np.ones((2, 5)))
+    off = np.asarray(s.present(1, 2, 5))
+    np.testing.assert_array_equal(off, [[0, 0, 1, 1, 1]] * 2)
+    np.testing.assert_array_equal(np.asarray(s.present(3, 2, 5)),
+                                  np.ones((2, 5)))
+
+
+def test_counter_uniform_traced_equals_concrete():
+    """The mask generator is a pure function of (seed, t, i): tracing
+    `t` (the chunked driver carries it on device) changes nothing, and
+    different rounds / seeds give different draws."""
+    u0 = np.asarray(counter_uniform(17, 4, 64))
+    assert u0.shape == (64,) and (u0 >= 0).all() and (u0 < 1).all()
+    u_jit = np.asarray(jax.jit(
+        lambda t: counter_uniform(17, t, 64))(jnp.int32(4)))
+    np.testing.assert_array_equal(u0, u_jit)
+    assert not np.array_equal(u0, np.asarray(counter_uniform(17, 5, 64)))
+    assert not np.array_equal(u0, np.asarray(counter_uniform(18, 4, 64)))
+
+
+def test_bernoulli_present_traced_equals_concrete():
+    s = ParticipationSchedule(kind="bernoulli", rate=0.5, seed=9)
+    m0 = np.asarray(s.present(7, 3, 4))
+    m_jit = np.asarray(jax.jit(lambda t: s.present(t, 3, 4))(jnp.int32(7)))
+    np.testing.assert_array_equal(m0, m_jit)
+    assert set(np.unique(m0)) <= {0.0, 1.0}
+    hist = s.history(10, 3, 4)
+    assert hist.shape == (10, 3, 4)
+    np.testing.assert_array_equal(hist[7], m0)
+
+
+def test_participation_kinds_exported():
+    assert set(PARTICIPATION_KINDS) == {"full", "bernoulli", "stragglers"}
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: sampled-out users contribute exactly zero to every hop
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:        # optional locally; CI installs it
+    given = None
+
+
+@pytest.mark.skipif(given is None, reason="hypothesis not installed")
+def test_sampled_out_user_never_reaches_any_hop_property():
+    @given(c=st.integers(1, 3), m=st.integers(1, 4), n=st.integers(1, 16),
+           t=st.integers(0, 50), seed=st.integers(0, 2 ** 16))
+    @settings(max_examples=20, deadline=None)
+    def prop(c, m, n, t, seed):
+        _check_sampled_out_exact_zero(c, m, n, t, seed)
+
+    prop()
+
+
+def test_sampled_out_user_never_reaches_any_hop_fixed_cases():
+    """hypothesis-free spot checks of the same property (the full
+    property test above runs wherever hypothesis is installed — CI)."""
+    for c, m, n, t, seed in ((2, 3, 8, 0, 3), (3, 4, 16, 17, 9),
+                             (1, 4, 2, 50, 123)):
+        _check_sampled_out_exact_zero(c, m, n, t, seed)
+
+
+def _check_sampled_out_exact_zero(c, m, n, t, seed):
+    """Replace every sampled-out user's delta with arbitrary garbage:
+    the precoded transmissions — the only thing any hop or power fold
+    ever sees — must be bitwise unchanged, and so must the ideal
+    cluster fold, the attendance rescale and the robust folds."""
+    rng = np.random.default_rng(seed)
+    sched = ParticipationSchedule(kind="bernoulli", rate=0.5, seed=seed)
+    mask = np.asarray(sched.present(t, c, m))
+    flat = jnp.asarray(rng.standard_normal((c, m, 2 * n)), jnp.float32)
+    garbage = flat + jnp.asarray(
+        1e6 * rng.standard_normal((c, m, 2 * n)), jnp.float32)
+    poisoned = jnp.where(jnp.asarray(mask)[..., None] > 0, flat, garbage)
+
+    mult = jnp.asarray(mask, jnp.float32)
+    tx_a = np.asarray(agg.cotaf_precode(flat, mult))
+    tx_b = np.asarray(agg.cotaf_precode(poisoned, mult))
+    np.testing.assert_array_equal(tx_a, tx_b)        # bitwise
+    # sampled-out rows ARE the zero pad slot
+    np.testing.assert_array_equal(tx_a[mask == 0], 0.0)
+
+    resc = agg.attendance_rescale(np.ones((c, m), np.float32), mult)
+    est_a = tx_a.mean(axis=1) * np.asarray(resc)[:, None]
+    est_b = tx_b.mean(axis=1) * np.asarray(resc)[:, None]
+    np.testing.assert_array_equal(est_a, est_b)
+
+    med_a = np.asarray(agg.masked_median(jnp.asarray(tx_a), mult))
+    med_b = np.asarray(agg.masked_median(jnp.asarray(poisoned), mult))
+    np.testing.assert_array_equal(med_a, med_b)

@@ -37,7 +37,9 @@ def _run(script: str, n_dev: int = 8) -> str:
 
 def test_ideal_aggregation_is_exact_mean():
     _run("""
-    import jax, jax.numpy as jnp, numpy as np
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
     from jax.sharding import Mesh, PartitionSpec as P, NamedSharding
     from repro.core.dist import OTADistConfig, whfl_aggregate, uniform_geom
     from repro.launch.mesh import refine_mesh
@@ -66,7 +68,9 @@ def test_ideal_aggregation_is_exact_mean():
 
 def test_equivalent_aggregation_unbiased_and_fused_matches():
     _run("""
-    import jax, jax.numpy as jnp, numpy as np
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.core.dist import OTADistConfig, whfl_aggregate, uniform_geom
     from repro.launch.mesh import refine_mesh
@@ -110,7 +114,9 @@ def test_equivalent_aggregation_unbiased_and_fused_matches():
 @requires_partial_auto
 def test_train_step_runs_and_learns():
     _run("""
-    import jax, jax.numpy as jnp, numpy as np
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
     from repro.configs import get_config
     from repro.configs.base import InputShape
     from repro.launch.mesh import make_production_mesh
@@ -153,7 +159,9 @@ def test_train_step_runs_and_learns():
 @requires_partial_auto
 def test_local_sgd_tau_I_path():
     _run("""
-    import jax, jax.numpy as jnp, numpy as np
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
     from repro.configs import get_config
     from repro.configs.base import InputShape
     from repro.launch.train import TrainConfig, build_train_step
@@ -215,7 +223,9 @@ def test_local_sgd_tau_I_path():
 @pytest.mark.slow
 def test_fused_fsdp_train_step():
     _run("""
-    import jax, jax.numpy as jnp, numpy as np
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
     from repro.configs import get_config
     from repro.configs.base import InputShape
     from repro.launch.train import TrainConfig, build_fused_train_step
@@ -259,7 +269,9 @@ def test_hierarchy_reduces_pod_crossing_traffic():
     pod-crossing hop moves the CLUSTER estimate once, not every user's
     delta — visible as grouped all-reduces in the compiled HLO."""
     _run("""
-    import jax, jax.numpy as jnp, re
+    import re
+    import jax
+    import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
     from repro.core.dist import OTADistConfig, whfl_aggregate, uniform_geom
     from repro.launch.mesh import refine_mesh

@@ -68,7 +68,8 @@ def test_scale_u256_sharded_1x1_vs_2x4_bitwise_and_seed_slice():
     single-device (1x1) run, and a single-seed sharded run equals its
     slice of the seed batch."""
     _run("""
-    import jax, numpy as np
+    import jax
+    import numpy as np
     from repro.exec import ShardedSweepRunner
     from repro.sim import get_scenario
     from repro.sim.sweep import RECORD_KEYS
@@ -137,7 +138,8 @@ def test_chunked_driver_sharded_bitwise_and_mesh_invariant():
     — metrics and final state — at a non-divisible tail window
     (T=3, eval_every=2), and still bitwise invariant to the mesh."""
     _run("""
-    import jax, numpy as np
+    import jax
+    import numpy as np
     from repro.exec import ShardedSweepRunner
     from repro.sim import get_scenario
 
@@ -173,7 +175,9 @@ def test_vmap_seeds_over_sharded_round():
     `vmap_seeds` lifts an OTA hop: vmapping the shard_map'd round over
     stacked (state, key) matches per-seed calls."""
     _run("""
-    import jax, jax.numpy as jnp, numpy as np
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
     from repro.core import aggregation as agg
     from repro.core.whfl import init_round_state
     from repro.exec import make_device_mesh, make_sharded_round_fn

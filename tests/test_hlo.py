@@ -1,8 +1,5 @@
 """HLO collective parsing + roofline arithmetic (launch/hlo.py)."""
-import numpy as np
-
-from repro.launch.hlo import (HBM_BW, ICI_BW, PEAK_FLOPS, Roofline,
-                              collective_stats, _shape_bytes)
+from repro.launch.hlo import Roofline, collective_stats, _shape_bytes
 
 HLO = """
 ENTRY main {

@@ -1,5 +1,4 @@
 """Pallas ota_combine kernel vs the pure-jnp oracle (interpret=True)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -75,7 +75,6 @@ def test_moe_dense_residual():
 def _ssd_naive(x, dt, A, Bc, Cc, h0):
     """O(L) sequential state recurrence (the SSD definition)."""
     Bsz, L, H, P = x.shape
-    N = Bc.shape[-1]
     h = h0.astype(jnp.float32)
     ys = []
     for t in range(L):

@@ -1,0 +1,302 @@
+"""Partial participation, stragglers & robust cluster aggregation.
+
+Pins the tentpole contracts of the participation axis:
+
+- the **no-op guarantee** — a full-attendance schedule (the default)
+  reproduces pre-participation results bitwise, and a Bernoulli
+  schedule with rate 1.0 (which runs the whole partial code path:
+  counter-PRNG mask, COTAF precode, attendance rescale) lands bitwise
+  on the full-attendance run (24-bit uniforms are strictly < 1.0, so
+  the mask is all-ones; ``x * 1.0`` and a ``full/got == 1.0`` rescale
+  are IEEE identities);
+- a sampled-out user's gradient never reaches any hop: perturbing its
+  data shard cannot change the post-round model by a single bit;
+- the masked robust folds (coordinate median / trimmed mean) against a
+  numpy oracle under arbitrary attendance masks;
+- bitwise engine/mesh invariance of `fig2_drop50` (stepwise + chunked)
+  and `fig2_byzantine1_median` on forced 8-device meshes — the
+  participation analogue of tests/test_uneven_mesh.py;
+- the robustness claim: with one sign-flipping byzantine user per
+  cluster, the coordinate-median fold bounds the accuracy loss that
+  plain OTA averaging suffers.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import run_forced_devices as _run
+
+from repro.core import aggregation as agg
+from repro.core.channel import OTAConfig, orthogonal_cluster_ota
+from repro.core.topology import uniform_topology
+from repro.core.whfl import (CLUSTER_AGGREGATORS, WHFLConfig,
+                             validate_participation)
+from repro.fed.clients import ParticipationSchedule
+from repro.sim.scenario import Scenario, get_scenario
+from repro.sim.sweep import SweepRunner
+
+
+# ---------------------------------------------------------------------------
+# masked robust folds vs numpy oracle
+# ---------------------------------------------------------------------------
+
+def _np_masked_median(x, mask):
+    C, M, _ = x.shape
+    out = np.zeros((C, x.shape[-1]), np.float32)
+    for c in range(C):
+        rows = x[c][mask[c] > 0]
+        if len(rows):
+            out[c] = np.median(rows, axis=0)
+    return out
+
+
+def _np_masked_trimmed_mean(x, mask, trim):
+    C, M, _ = x.shape
+    out = np.zeros((C, x.shape[-1]), np.float32)
+    for c in range(C):
+        rows = np.sort(x[c][mask[c] > 0], axis=0)
+        n = len(rows)
+        if n:
+            k = int(np.floor(trim * n))
+            kept = rows[k: n - k] if n - 2 * k > 0 else rows[:0]
+            out[c] = (kept.mean(axis=0) if len(kept)
+                      else rows.mean(axis=0))
+    return out
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_masked_median_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((3, 5, 8)).astype(np.float32)
+    mask = (rng.uniform(size=(3, 5)) < 0.6).astype(np.float32)
+    mask[0] = 1.0           # one full cluster
+    mask[2] = 0.0           # one empty cluster -> exact zero output
+    got = np.asarray(agg.masked_median(jnp.asarray(x), jnp.asarray(mask)))
+    np.testing.assert_allclose(got, _np_masked_median(x, mask), rtol=1e-6)
+    np.testing.assert_array_equal(got[2], 0.0)
+
+
+@pytest.mark.parametrize("trim", [0.0, 0.2, 0.25, 0.4])
+def test_masked_trimmed_mean_matches_numpy(trim):
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((3, 6, 4)).astype(np.float32)
+    mask = (rng.uniform(size=(3, 6)) < 0.7).astype(np.float32)
+    mask[1] = 0.0
+    got = np.asarray(agg.masked_trimmed_mean(jnp.asarray(x),
+                                             jnp.asarray(mask), trim))
+    np.testing.assert_allclose(got, _np_masked_trimmed_mean(x, mask, trim),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(got[1], 0.0)
+    with pytest.raises(ValueError, match="trim"):
+        agg.masked_trimmed_mean(jnp.asarray(x), jnp.asarray(mask), 0.5)
+
+
+def test_median_defeats_outlier_trimmed_defeats_pair():
+    x = np.ones((1, 5, 2), np.float32)
+    x[0, 4] = 1e6           # one corrupt user
+    mask = np.ones((1, 5), np.float32)
+    med = np.asarray(agg.masked_median(jnp.asarray(x), jnp.asarray(mask)))
+    np.testing.assert_array_equal(med, 1.0)
+    tm = np.asarray(agg.masked_trimmed_mean(jnp.asarray(x),
+                                            jnp.asarray(mask), 0.25))
+    np.testing.assert_array_equal(tm, 1.0)
+
+
+def test_attendance_rescale_exact_identities():
+    w = np.asarray([[1.0, 2.0, 3.0]], np.float32)
+    # full attendance: the correction is EXACTLY 1.0 (no-op guarantee)
+    full = np.asarray(agg.attendance_rescale(w, jnp.ones((1, 3))))
+    assert full.item() == 1.0
+    # nobody claimed: 0, not inf (empty cluster contributes no update)
+    none = np.asarray(agg.attendance_rescale(w, jnp.zeros((1, 3))))
+    assert none.item() == 0.0
+    # partial: full_sum / claimed_sum over the receive weights
+    part = np.asarray(agg.attendance_rescale(
+        w, jnp.asarray([[1.0, 0.0, 1.0]])))
+    np.testing.assert_allclose(part, 6.0 / 4.0, rtol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# orthogonalized per-user reception + config validation
+# ---------------------------------------------------------------------------
+
+def test_orthogonal_cluster_ota_ideal_and_shapes():
+    import jax
+    topo = uniform_topology(C=2, M=3, K=4, K_ps=4)
+    deltas = jnp.asarray(
+        np.random.default_rng(0).standard_normal((2, 3, 6)), jnp.float32)
+    ideal = orthogonal_cluster_ota(jax.random.PRNGKey(0), deltas, topo,
+                                   1.0, OTAConfig(mode="ideal"))
+    assert ideal is deltas
+    est = orthogonal_cluster_ota(jax.random.PRNGKey(0), deltas, topo, 1.0,
+                                 OTAConfig(mode="equivalent"))
+    assert est.shape == deltas.shape
+    assert np.isfinite(np.asarray(est)).all()
+    with pytest.raises(ValueError, match="cannot be robustified"):
+        orthogonal_cluster_ota(jax.random.PRNGKey(0), deltas, topo, 1.0,
+                               OTAConfig(mode="faithful", backend="fused"))
+
+
+def test_validate_participation_gates():
+    ok = WHFLConfig(cluster_agg="median",
+                    ota=OTAConfig(mode="equivalent"))
+    validate_participation(ok)                       # no raise
+    validate_participation(WHFLConfig())             # default mean
+    with pytest.raises(ValueError, match="unknown cluster_agg"):
+        validate_participation(WHFLConfig(cluster_agg="krum"))
+    with pytest.raises(ValueError, match="cluster hop"):
+        validate_participation(WHFLConfig(cluster_agg="median",
+                                          mode="conventional"))
+    with pytest.raises(ValueError, match="superposition"):
+        validate_participation(WHFLConfig(
+            cluster_agg="median",
+            ota=OTAConfig(mode="faithful", backend="fused")))
+    assert set(CLUSTER_AGGREGATORS) == {"mean", "median", "trimmed_mean"}
+
+
+def test_participation_scenarios_registered():
+    for name in ("fig2_drop10", "fig2_drop50", "fig2_straggler",
+                 "fig2_byzantine1", "fig2_byzantine3",
+                 "fig2_byzantine1_median", "fig2_byzantine3_median"):
+        sc = get_scenario(name)
+        cfg = sc.whfl_config()            # builds + validates
+        validate_participation(cfg)
+    assert get_scenario("fig2_drop50").participation_rate == 0.5
+    assert get_scenario("fig2_byzantine3_median").cluster_agg == "median"
+    # the paper baselines stay full-attendance no-ops
+    assert get_scenario("fig2_iid").whfl_config().participation.is_full
+
+
+# ---------------------------------------------------------------------------
+# no-op guarantee + exact-zero contribution (single engine, in-process)
+# ---------------------------------------------------------------------------
+
+def _quick_run(sc, seeds=1):
+    return SweepRunner([sc], seeds=seeds, batch="map").run_scenario(sc)
+
+
+def test_full_schedule_noop_bernoulli_rate1_bitwise():
+    """fig2_iid (full attendance, the pre-participation program) vs the
+    same scenario through the ENTIRE partial-participation code path
+    with Bernoulli rate 1.0: bitwise-equal trajectories and power."""
+    base = get_scenario("fig2_iid").quick()
+    full = _quick_run(base)
+    b1 = _quick_run(base.replace(participation="bernoulli",
+                                 participation_rate=1.0))
+    assert full.acc == b1.acc
+    assert full.loss == b1.loss
+    assert full.edge_power == b1.edge_power
+    assert full.is_power == b1.is_power
+
+
+def test_zero_attendance_round_leaves_model_bitwise_unchanged():
+    """rate = 0.0 over an ideal channel: nobody transmits, the
+    attendance rescale guards the 0/0 and every update is exactly zero
+    (over a noisy channel the IS -> PS hop still carries channel noise
+    — ISs are infrastructure and always transmit — so the exact
+    identity only holds end-to-end for mode='ideal')."""
+    sc = (get_scenario("fig2_iid").quick()
+          .replace(participation="bernoulli", participation_rate=0.0,
+                   ota_mode="ideal", total_IT=2, eval_every=1))
+    res = _quick_run(sc)
+    # accuracy never moves off the init model's value, power stays 0
+    assert len(set(res.acc[0])) == 1
+    assert res.edge_power[0] == [0.0, 0.0]
+
+
+def test_sampled_out_user_data_cannot_reach_the_model():
+    """End-to-end exact-zero contribution: corrupt the data shard of a
+    user the round-0 Bernoulli mask samples OUT — the post-round model
+    and transmit power must be bitwise identical."""
+    import jax
+    from repro.core.whfl import init_round_state, make_round_fn
+    from repro.core import aggregation as fagg
+    from repro.optim import sgd
+
+    C, M, n, d = 2, 3, 8, 6
+    sched = ParticipationSchedule(kind="bernoulli", rate=0.4, seed=3)
+    mask = np.asarray(sched.present(0, C, M))
+    assert mask.min() == 0.0            # seed chosen so someone is out
+    c_out, m_out = map(int, np.argwhere(mask == 0)[0])
+
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((C, M, n, d)).astype(np.float32)
+    Y = rng.standard_normal((C, M, n)).astype(np.float32)
+    X2 = X.copy()
+    X2[c_out, m_out] = 1e3 * rng.standard_normal((n, d))
+
+    topo = uniform_topology(C=C, M=M, K=4, K_ps=4)
+    cfg = WHFLConfig(tau=2, I=1, batch=4, participation=sched,
+                     ota=OTAConfig(mode="ideal"))
+    params = {"w": jnp.zeros((d,), jnp.float32)}
+    spec = fagg.make_flat_spec(params)
+    loss = lambda p, x, y, r: jnp.mean((x @ p["w"] - y) ** 2)
+    opt = sgd(1e-2)
+
+    outs = []
+    for Xv in (X, X2):
+        rf = jax.jit(make_round_fn(loss, opt, topo, cfg, spec, Xv, Y))
+        st = init_round_state(params, opt, C, M)
+        outs.append(rf(st, jax.random.PRNGKey(7), 1.0, 20.0))
+    a, b = outs
+    np.testing.assert_array_equal(np.asarray(a["theta"]["w"]),
+                                  np.asarray(b["theta"]["w"]))
+    assert float(a["power_edge"]) == float(b["power_edge"])
+    assert float(a["power_is"]) == float(b["power_is"])
+
+
+# ---------------------------------------------------------------------------
+# byzantine robustness: median bounds the loss plain averaging suffers
+# ---------------------------------------------------------------------------
+
+def test_median_bounds_byzantine_accuracy_loss():
+    base = Scenario(name="byz_probe", dataset="mnist", partition="iid",
+                    tau=1, I=1, batch=64, mode="whfl", ota_mode="ideal",
+                    C=2, M=5, K=8, K_ps=8, total_IT=10, lr=5e-2,
+                    n_train=2000, n_test=500, eval_every=10,
+                    byzantine_scale=3.0)
+    clean = _quick_run(base.replace(name="byz_clean"))
+    mean = _quick_run(base.replace(name="byz_mean", n_byzantine=1))
+    median = _quick_run(base.replace(name="byz_median", n_byzantine=1,
+                                     cluster_agg="median"))
+    acc_clean, acc_mean, acc_med = (r.acc[0][-1]
+                                    for r in (clean, mean, median))
+    # sanity: the attack actually hurts plain averaging...
+    assert acc_clean > 0.9
+    assert acc_mean < acc_clean - 0.15
+    # ...and the coordinate median bounds the loss (within 5 points of
+    # clean, and far above the attacked mean)
+    assert acc_med > acc_clean - 0.05
+    assert acc_med > acc_mean + 0.15
+
+
+# ---------------------------------------------------------------------------
+# engine/mesh bitwise invariance (subprocess, 8 forced devices)
+# ---------------------------------------------------------------------------
+
+def test_participation_engine_mesh_bitwise_parity():
+    """fig2_drop50 (stepwise + chunked) and fig2_byzantine1_median on
+    2x4 / 2x2 meshes are bitwise identical to the single engine — the
+    participation analogue of the uneven-mesh acceptance contract (the
+    quick fig2 geometry C=M=2 does not divide 2x4, so this also
+    exercises mask-composes-with-padding)."""
+    _run("""
+        from repro.sim.sweep import SweepRunner
+        from repro.sim.scenario import get_scenario
+        from repro.exec.runner import ShardedSweepRunner
+
+        for name in ("fig2_drop50", "fig2_byzantine1_median"):
+            sc = get_scenario(name).quick()
+            ref = SweepRunner([sc], seeds=2, batch="map").run_scenario(sc)
+            for mesh in ((2, 4), (2, 2)):
+                got = ShardedSweepRunner([sc], seeds=2,
+                                         mesh=mesh).run_scenario(sc)
+                assert got.acc == ref.acc, (name, mesh)
+                assert got.loss == ref.loss, (name, mesh)
+                assert got.edge_power == ref.edge_power, (name, mesh)
+                assert got.is_power == ref.is_power, (name, mesh)
+            ch = ShardedSweepRunner([sc], seeds=2, mesh=(2, 4),
+                                    driver="chunked").run_scenario(sc)
+            assert ch.acc == ref.acc, (name, "chunked")
+            assert ch.edge_power == ref.edge_power, (name, "chunked")
+            print(name, "OK")
+    """)

@@ -1,5 +1,4 @@
 """Property-based tests (hypothesis) for the system's invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -79,7 +78,8 @@ def test_partitioners_preserve_samples(seed, c, m):
 @given(seed=st.integers(0, 2 ** 16))
 @settings(**SETTINGS)
 def test_checkpoint_roundtrip(seed):
-    import tempfile, os
+    import os
+    import tempfile
     from repro import checkpoint as ckpt
     rng = np.random.default_rng(seed)
     tree = {
@@ -160,7 +160,6 @@ def test_pad_plan_properties(C, M, mc, mu):
 @settings(**SETTINGS)
 def test_bound_monotone_in_noise(eta, tau, I):
     """Theorem 1 evaluator: more channel noise -> larger bound."""
-    import dataclasses
     from repro.core import uniform_topology
     from repro.core.bound import BoundParams, theorem1_curve
     topo_lo = uniform_topology(C=2, M=3, K=64, K_ps=64, sigma_z2=0.1)

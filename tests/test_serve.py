@@ -5,8 +5,6 @@ import subprocess
 import sys
 import textwrap
 
-import jax
-import pytest
 
 from repro.configs import INPUT_SHAPES, get_config
 from repro.launch.serve import cache_specs, decode_window
@@ -40,7 +38,8 @@ def test_cache_specs_ssm_constant():
 
 def test_decode_step_lowers_on_small_mesh():
     script = """
-    import jax, jax.numpy as jnp
+    import jax
+    import jax.numpy as jnp
     from repro.configs import get_config, INPUT_SHAPES
     from repro.configs.base import InputShape
     from repro.launch.serve import build_decode_step, cache_specs

@@ -132,7 +132,8 @@ def test_fig2_padded_2x4_bitwise_equals_single_engine_both_drivers():
     state, eval metrics and per-round transmit power — for both the
     stepwise and the chunked driver."""
     _run("""
-    import jax, numpy as np
+    import jax
+    import numpy as np
     from repro.exec import ShardedSweepRunner
     from repro.sim import get_scenario
     from repro.sim.sweep import SweepRunner
@@ -170,7 +171,8 @@ def test_fused_backend_padded_meshes_mesh_invariant_and_match_single():
     engine by 1 ULP on this odd shape (XLA:CPU layout assignment — see
     repro.exec.round docstring), which is bounded here explicitly."""
     _run("""
-    import jax, numpy as np
+    import jax
+    import numpy as np
     from repro.exec import ShardedSweepRunner
     from repro.sim import get_scenario
     from repro.sim.sweep import SweepRunner
@@ -221,7 +223,8 @@ _FIG2_NAMES = [n for n in _FIG_NAMES if n.startswith("fig2_")]
 _FIG3_NAMES = [n for n in _FIG_NAMES if n.startswith("fig3_")]
 
 _PARITY_SCRIPT = """
-import jax, numpy as np
+import jax
+import numpy as np
 from repro.exec import ShardedSweepRunner
 from repro.sim import get_scenario
 from repro.sim.sweep import SweepRunner

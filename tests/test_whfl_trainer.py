@@ -2,7 +2,6 @@
 protocol on the paper's MNIST-like task, all three channel modes."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.core import OTAConfig, uniform_topology
