@@ -51,7 +51,12 @@ import sys
 from typing import Dict, List, Tuple
 
 BASELINE_SCHEMA = "repro.bench.baseline/v1"
-TRAJECTORY_SCHEMA = "repro.bench.trajectory/v1"
+# v2 entries carry run provenance (git SHA, jax version, device count,
+# platform) so a trajectory kink can be attributed to the commit or
+# environment change that caused it; v1 documents (no provenance) are
+# still readable and are upgraded in place on the next append.
+TRAJECTORY_SCHEMA = "repro.bench.trajectory/v2"
+TRAJECTORY_READ_SCHEMAS = ("repro.bench.trajectory/v1", TRAJECTORY_SCHEMA)
 
 
 def _key(rec: Dict) -> Tuple:
@@ -165,28 +170,59 @@ def check_dispatch_ratio(fresh: List[Dict], scenario: str,
     return []
 
 
+def run_provenance() -> Dict:
+    """Environment fingerprint stored with each v2 trajectory entry.
+    Best-effort: a missing git repo or jax install records "unknown"
+    rather than failing the gate run."""
+    import platform as _platform
+    try:
+        import subprocess
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        sha = "unknown"
+    try:
+        from importlib.metadata import version  # no jax runtime init
+        jax_version = version("jax")
+    except Exception:
+        jax_version = "unknown"
+    return {
+        "git_sha": sha,
+        "jax_version": jax_version,
+        "platform": _platform.platform(),
+        "python": _platform.python_version(),
+    }
+
+
 def append_trajectory(path: str, fresh: List[Dict], passed: bool,
-                      run_id: str, timestamp: str) -> None:
+                      run_id: str, timestamp: str,
+                      provenance: Dict = None) -> None:
     """Append one run entry to the time-series document at ``path``.
 
     Creates the document when absent; refuses to clobber a file that is
     not a trajectory document (a mis-pointed ``--append`` at a sweep or
-    baseline JSON must not silently destroy it).
+    baseline JSON must not silently destroy it).  v1 documents are
+    accepted and upgraded to v2 (their old entries simply carry no
+    ``provenance``).
     """
     doc = {"schema": TRAJECTORY_SCHEMA, "runs": []}
     if os.path.exists(path):
         with open(path) as f:
             existing = json.load(f)
-        if existing.get("schema") != TRAJECTORY_SCHEMA:
+        if existing.get("schema") not in TRAJECTORY_READ_SCHEMAS:
             raise SystemExit(
                 f"--append target {path!r} has schema "
-                f"{existing.get('schema')!r}, expected {TRAJECTORY_SCHEMA!r}"
-                f" — refusing to overwrite")
+                f"{existing.get('schema')!r}, expected one of "
+                f"{TRAJECTORY_READ_SCHEMAS!r} — refusing to overwrite")
+        existing["schema"] = TRAJECTORY_SCHEMA
         doc = existing
     entry = {
         "run_id": run_id,
         "timestamp": timestamp,
         "passed": passed,
+        "provenance": provenance if provenance is not None
+        else run_provenance(),
         "records": [
             {"scenario": r["scenario"],
              "exec": r.get("exec", {}).get("name"),
@@ -235,9 +271,13 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     fresh: List[Dict] = []
+    device_counts = set()
     for path in args.fresh:
         with open(path) as f:
-            fresh.extend(_records(json.load(f)))
+            doc = json.load(f)
+        fresh.extend(_records(doc))
+        if doc.get("device_count") is not None:
+            device_counts.add(doc["device_count"])
     with open(args.baseline) as f:
         baseline = _records(json.load(f))
 
@@ -265,7 +305,13 @@ def main(argv=None) -> int:
     if args.append:
         stamp = datetime.datetime.now(datetime.timezone.utc).isoformat(
             timespec="seconds")
-        append_trajectory(args.append, fresh, not errors, args.run_id, stamp)
+        prov = run_provenance()
+        # device count comes from the fresh BENCH documents themselves
+        # (the sweep records what it actually used)
+        prov["device_count"] = (sorted(device_counts)[-1]
+                                if device_counts else None)
+        append_trajectory(args.append, fresh, not errors, args.run_id,
+                          stamp, provenance=prov)
 
     if errors:
         print("\nFAILED:", file=sys.stderr)

@@ -117,6 +117,47 @@ def sweep_table(doc) -> str:
     return "\n".join(lines)
 
 
+def trajectory_table(doc) -> str:
+    """Markdown rounds/sec-over-runs tables for a
+    ``repro.bench.trajectory`` document (v1 or v2; see
+    benchmarks/bench_check.py --append).  One table per
+    (scenario, exec, driver, mesh) record key, one row per CI run —
+    v2 entries add the provenance columns (git SHA, jax version,
+    device count), v1 rows render them as em-dashes."""
+    groups: dict = {}
+    for entry in doc.get("runs", []):
+        prov = entry.get("provenance") or {}
+        for r in entry.get("records", []):
+            key = (r.get("scenario"), r.get("exec"), r.get("driver"),
+                   r.get("mesh"))
+            groups.setdefault(key, []).append((entry, prov, r))
+    out = []
+    for key in sorted(groups, key=str):
+        sc, ex, drv, mesh = key
+        out.append(f"### {sc} — {ex}/{drv}"
+                   + (f" @ {mesh}" if mesh else ""))
+        out.append("| run | timestamp | git | jax | devices "
+                   "| rounds/sec | dispatches |")
+        out.append("|---|---|---|---|---|---|---|")
+        for entry, prov, r in groups[key]:
+            sha = prov.get("git_sha") or "—"
+            sha = sha[:9] if sha != "unknown" else sha
+            rps = r.get("rounds_per_sec")
+            disp = r.get("dispatches")
+            out.append(
+                f"| {entry.get('run_id', '—')} "
+                f"| {entry.get('timestamp', '—')} "
+                f"| {sha} "
+                f"| {prov.get('jax_version') or '—'} "
+                f"| {prov.get('device_count') or '—'} "
+                f"| {f'{rps:.2f}' if rps is not None else '—'} "
+                f"| {disp if disp is not None else '—'} |")
+        out.append("")
+    if not out:
+        return "(empty trajectory document — no runs recorded yet)"
+    return "\n".join(out).rstrip()
+
+
 def main():
     import argparse
 
@@ -125,10 +166,19 @@ def main():
                     help="render a repro.sim.sweep JSON document as a "
                          "markdown table instead of regenerating "
                          "EXPERIMENTS.md")
+    ap.add_argument("--trajectory", default=None, metavar="TRAJ_JSON",
+                    help="render a repro.bench.trajectory document "
+                         "(bench_check --append) as rounds/sec-over-runs "
+                         "markdown tables, one per scenario/engine/"
+                         "driver/mesh key")
     args = ap.parse_args()
     if args.sweep:
         with open(args.sweep) as f:
             print(sweep_table(json.load(f)))
+        return
+    if args.trajectory:
+        with open(args.trajectory) as f:
+            print(trajectory_table(json.load(f)))
         return
 
     single = load_records(os.path.join(ROOT, "results",

@@ -32,6 +32,9 @@ from repro.core.channel import (ROBUST_CAPABLE_BACKENDS, OTAConfig,
                                 orthogonal_cluster_ota, resolve_backend)
 from repro.core.topology import Topology, power_schedule
 from repro.fed.clients import ParticipationSchedule
+from repro.obs.telemetry import (cluster_telemetry, edge_telemetry_init,
+                                 is_telemetry, is_telemetry_zero,
+                                 telemetry_init)
 from repro.optim import Optimizer, apply_updates
 
 CLUSTER_AGGREGATORS = ("mean", "median", "trimmed_mean")
@@ -58,6 +61,13 @@ class WHFLConfig:
     # per-user receptions; reference/equivalent/ideal only)
     cluster_agg: str = "mean"
     agg_trim: float = 0.25       # trim fraction for "trimmed_mean"
+    # in-program round diagnostics (repro.obs.telemetry): when True the
+    # state gains a "telemetry" block recomputed every round from
+    # values the round already materializes.  The False default is a
+    # PYTHON-level gate — the traced program is then literally the
+    # pre-telemetry program (bitwise; same discipline as the
+    # participation no-op above, pinned by tests/test_obs.py)
+    telemetry: bool = False
 
 
 def validate_participation(cfg: WHFLConfig) -> None:
@@ -86,12 +96,19 @@ def validate_participation(cfg: WHFLConfig) -> None:
                 f"ROBUST_CAPABLE_BACKENDS)")
 
 
-def init_round_state(params, opt: Optimizer, C: int, M: int):
-    """Fresh per-run trainer state for `make_round_fn` round functions."""
+def init_round_state(params, opt: Optimizer, C: int, M: int,
+                     telemetry_C: Optional[int] = None):
+    """Fresh per-run trainer state for `make_round_fn` round functions.
+
+    ``telemetry_C`` (the REAL cluster count — not a mesh-padded one)
+    adds the zeroed ``"telemetry"`` diagnostics block for
+    ``WHFLConfig.telemetry=True`` round functions; leave it None for
+    the default telemetry-off state, which is unchanged bitwise.
+    """
     opt0 = opt.init(params)
     opt_state = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (C, M) + x.shape).copy(), opt0)
-    return {
+    state = {
         "theta": params,
         "opt": opt_state,
         "t": jnp.zeros((), jnp.int32),
@@ -100,6 +117,9 @@ def init_round_state(params, opt: Optimizer, C: int, M: int):
         "n_edge_tx": jnp.zeros(()),    # transmissions counted
         "n_is_tx": jnp.zeros(()),
     }
+    if telemetry_C is not None:
+        state["telemetry"] = telemetry_init(telemetry_C)
+    return state
 
 
 def make_local_train(loss_fn: Callable, opt: Optimizer,
@@ -162,6 +182,10 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
     schedule = cfg.participation
     partial = not schedule.is_full
     robust = cfg.cluster_agg != "mean"
+    # the telemetry gate is Python-level too: with tele_on False not
+    # one op below changes (repro.obs.telemetry; the fence-isolated
+    # diagnostics are only *added*, never interleaved, when True)
+    tele_on = cfg.telemetry
     tx_base = jnp.asarray(schedule.tx_base(C, M)) if partial else None
     # receive weights the attendance rescale renormalizes over: the
     # ideal mean weighs users uniformly, the OTA folds by own-beta
@@ -220,19 +244,28 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
                     rx_w_conv.reshape(-1), claimed.reshape(-1))
             theta = apply_updates(theta, agg.unflatten(spec, est))
             p_edge = agg.symbol_power(flat, P_t)
-            return {**state, "theta": theta, "opt": opt_state,
-                    "t": step + 1,
-                    "power_edge": state["power_edge"] + p_edge,
-                    "n_edge_tx": state["n_edge_tx"] + 1.0,
-                    "power_is": state["power_is"],
-                    "n_is_tx": state["n_is_tx"]}
+            out = {**state, "theta": theta, "opt": opt_state,
+                   "t": step + 1,
+                   "power_edge": state["power_edge"] + p_edge,
+                   "n_edge_tx": state["n_edge_tx"] + 1.0,
+                   "power_is": state["power_is"],
+                   "n_is_tx": state["n_is_tx"]}
+            if tele_on:
+                out["telemetry"] = {
+                    **cluster_telemetry(flat, est, claimed, topo, P_t,
+                                        mode="conventional"),
+                    **is_telemetry_zero()}
+            return out
 
         # --- W-HFL ---
         theta_IS = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (C,) + x.shape), theta)
 
         def cluster_iter(carry, k):
-            th_IS, opt_state, p_acc = carry
+            if tele_on:  # the last cluster iteration's block survives
+                th_IS, opt_state, p_acc, _ = carry
+            else:
+                th_IS, opt_state, p_acc = carry
             k1, k2 = jax.random.split(k)
             flat, opt_state = users_train(th_IS, opt_state, k1, step)
             if partial:
@@ -241,13 +274,18 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
             th_IS = jax.vmap(
                 lambda th, e: apply_updates(th, agg.unflatten(spec, e))
             )(th_IS, est)
-            return (th_IS, opt_state,
-                    p_acc + agg.symbol_power(flat, P_t)), None
+            out = (th_IS, opt_state,
+                   p_acc + agg.symbol_power(flat, P_t))
+            if tele_on:
+                out += (cluster_telemetry(flat, est, claimed, topo, P_t),)
+            return out, None
 
         keys = jax.random.split(key, cfg.I + 1)
-        (theta_IS, opt_state, p_edge), _ = jax.lax.scan(
-            cluster_iter, (theta_IS, state["opt"], jnp.zeros(())),
-            keys[: cfg.I])
+        carry0 = (theta_IS, state["opt"], jnp.zeros(()))
+        if tele_on:
+            carry0 += (edge_telemetry_init(C),)
+        carry, _ = jax.lax.scan(cluster_iter, carry0, keys[: cfg.I])
+        theta_IS, opt_state, p_edge = carry[:3]
 
         is_deltas = jax.vmap(
             lambda th: agg.flatten(
@@ -255,11 +293,15 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
         est = global_ota(keys[-1], is_deltas, topo, P_is_t, cfg.ota)
         theta = apply_updates(theta, agg.unflatten(spec, est))
         p_is = agg.symbol_power(is_deltas, P_is_t)
-        return {**state, "theta": theta, "opt": opt_state, "t": step + 1,
-                "power_edge": state["power_edge"] + p_edge,
-                "n_edge_tx": state["n_edge_tx"] + float(cfg.I),
-                "power_is": state["power_is"] + p_is,
-                "n_is_tx": state["n_is_tx"] + 1.0}
+        out = {**state, "theta": theta, "opt": opt_state, "t": step + 1,
+               "power_edge": state["power_edge"] + p_edge,
+               "n_edge_tx": state["n_edge_tx"] + float(cfg.I),
+               "power_is": state["power_is"] + p_is,
+               "n_is_tx": state["n_is_tx"] + 1.0}
+        if tele_on:
+            out["telemetry"] = {**carry[3],
+                                **is_telemetry(is_deltas, topo, P_is_t)}
+        return out
 
     return round_fn
 
@@ -363,7 +405,9 @@ class WHFLTrainer:
             self.round_fn = make_round_fn(self.loss_fn, self.opt, self.topo,
                                           self.cfg, spec, self.X, self.Y)
             self._round = jax.jit(self.round_fn)
-        return init_round_state(params, self.opt, self.C, self.M)
+        return init_round_state(
+            params, self.opt, self.C, self.M,
+            telemetry_C=self.C if self.cfg.telemetry else None)
 
     # -- public API ------------------------------------------------------------
 

@@ -39,16 +39,19 @@ def make_runner(exec_name: str, scenarios: Sequence[Union[str, Scenario]],
                 *, seeds=1, quick: bool = False, batch: str = "vmap",
                 mesh: Union[str, tuple] = "1x1",
                 keep_state: bool = False, driver: str = "stepwise",
-                warmup: bool = False) -> SweepRunner:
+                warmup: bool = False, telemetry: bool = False,
+                trace=None) -> SweepRunner:
     """Engine factory behind the ``--exec`` CLI flag."""
     if exec_name == "single":
         return SweepRunner(scenarios, seeds=seeds, quick=quick,
                            keep_state=keep_state, batch=batch,
-                           driver=driver, warmup=warmup)
+                           driver=driver, warmup=warmup,
+                           telemetry=telemetry, trace=trace)
     if exec_name == "sharded":
         return ShardedSweepRunner(scenarios, seeds=seeds, quick=quick,
                                   keep_state=keep_state, mesh=mesh,
-                                  driver=driver, warmup=warmup)
+                                  driver=driver, warmup=warmup,
+                                  telemetry=telemetry, trace=trace)
     raise ValueError(
         f"unknown execution engine {exec_name!r}; known: "
         f"{', '.join(ENGINES)}")

@@ -73,6 +73,8 @@ from repro.core.whfl import (WHFLConfig, make_local_train,
                              validate_participation)
 from repro.exec.mesh import pad_plan_for
 from repro.kernels import fused_mac
+from repro.obs.telemetry import (cluster_telemetry, edge_telemetry_init,
+                                 is_telemetry, is_telemetry_zero)
 # the executor's symbol padding must agree with the kernel's rounding
 from repro.kernels.fused_mac import _round_up
 from repro.optim import Optimizer, apply_updates
@@ -119,6 +121,11 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
     schedule = cfg.participation
     partial = not schedule.is_full
     robust = cfg.cluster_agg != "mean"
+    # telemetry mirrors the single engine's Python-level gate: off
+    # inserts nothing; on computes the identical fence-isolated
+    # diagnostics from the *gathered* (real, unpadded) values, so the
+    # block is replicated on every shard and mesh-invariant
+    tele_on = cfg.telemetry
     tx_base = jnp.asarray(schedule.tx_base(C, M)) if partial else None
     rx_w = (np.ones((C, M), np.float32) if cfg.ota.mode == "ideal"
             else np.asarray(topo.beta_own, np.float32))
@@ -332,22 +339,31 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
             flat_loc, opt_state, pw = users_train(
                 theta_IS, state["opt"], k1, step, X_loc, Y_loc, ci, ui,
                 mult_p)
-            est = conventional_ota(k2, _gather_cm(flat_loc), topo, P_t,
-                                   cfg.ota)
+            flat = _gather_cm(flat_loc)
+            est = conventional_ota(k2, flat, topo, P_t, cfg.ota)
             if partial:
                 est = est * agg.attendance_rescale(
                     rx_w_conv.reshape(-1), claimed.reshape(-1))
             theta = apply_updates(theta, agg.unflatten(spec, est))
-            return {**state, "theta": theta, "opt": opt_state,
-                    "t": step + 1,
-                    "power_edge": state["power_edge"] + edge_power(pw, P_t),
-                    "n_edge_tx": state["n_edge_tx"] + 1.0,
-                    "power_is": state["power_is"],
-                    "n_is_tx": state["n_is_tx"]}
+            out = {**state, "theta": theta, "opt": opt_state,
+                   "t": step + 1,
+                   "power_edge": state["power_edge"] + edge_power(pw, P_t),
+                   "n_edge_tx": state["n_edge_tx"] + 1.0,
+                   "power_is": state["power_is"],
+                   "n_is_tx": state["n_is_tx"]}
+            if tele_on:
+                out["telemetry"] = {
+                    **cluster_telemetry(flat, est, claimed, topo, P_t,
+                                        mode="conventional"),
+                    **is_telemetry_zero()}
+            return out
 
         # --- W-HFL ---
         def cluster_iter(carry, k):
-            th_IS, opt_state, p_acc = carry
+            if tele_on:  # the last cluster iteration's block survives
+                th_IS, opt_state, p_acc, _ = carry
+            else:
+                th_IS, opt_state, p_acc = carry
             k1, k2 = jax.random.split(k)
             flat_loc, opt_state, pw = users_train(
                 th_IS, opt_state, k1, step, X_loc, Y_loc, ci, ui, mult_p)
@@ -356,12 +372,22 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
             th_IS = jax.vmap(
                 lambda th, e: apply_updates(th, agg.unflatten(spec, e))
             )(th_IS, est)
-            return (th_IS, opt_state, p_acc + edge_power(pw, P_t)), None
+            out = (th_IS, opt_state, p_acc + edge_power(pw, P_t))
+            if tele_on:
+                # gathered real [C, M, 2N] deltas + real estimate rows:
+                # the literal single-engine telemetry inputs, computed
+                # replicated (opt-in cost; the off-path has no gather)
+                est_r = est if Cp == C else est[:C]
+                out += (cluster_telemetry(_gather_cm(flat_loc), est_r,
+                                          claimed, topo, P_t),)
+            return out, None
 
         keys = jax.random.split(key, cfg.I + 1)
-        (theta_IS, opt_state, p_edge), _ = jax.lax.scan(
-            cluster_iter, (theta_IS, state["opt"], jnp.zeros(())),
-            keys[: cfg.I])
+        carry0 = (theta_IS, state["opt"], jnp.zeros(()))
+        if tele_on:
+            carry0 += (edge_telemetry_init(C),)
+        carry, _ = jax.lax.scan(cluster_iter, carry0, keys[: cfg.I])
+        theta_IS, opt_state, p_edge = carry[:3]
 
         # only the real clusters transmit to the PS
         theta_IS_act = (theta_IS if Cp == C else
@@ -373,17 +399,25 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
         est = global_ota(keys[-1], is_deltas, topo, P_is_t, cfg.ota)
         theta = apply_updates(theta, agg.unflatten(spec, est))
         p_is = agg.symbol_power(is_deltas, P_is_t)
-        return {**state, "theta": theta, "opt": opt_state, "t": step + 1,
-                "power_edge": state["power_edge"] + p_edge,
-                "n_edge_tx": state["n_edge_tx"] + float(cfg.I),
-                "power_is": state["power_is"] + p_is,
-                "n_is_tx": state["n_is_tx"] + 1.0}
+        out = {**state, "theta": theta, "opt": opt_state, "t": step + 1,
+               "power_edge": state["power_edge"] + p_edge,
+               "n_edge_tx": state["n_edge_tx"] + float(cfg.I),
+               "power_is": state["power_is"] + p_is,
+               "n_is_tx": state["n_is_tx"] + 1.0}
+        if tele_on:
+            out["telemetry"] = {**carry[3],
+                                **is_telemetry(is_deltas, topo, P_is_t)}
+        return out
 
     state_spec = {
         "theta": P(), "opt": P("cluster", "user"), "t": P(),
         "power_edge": P(), "power_is": P(), "n_edge_tx": P(),
         "n_is_tx": P(),
     }
+    if tele_on:
+        # the whole diagnostics block is computed from gathered values,
+        # hence replicated (the tree-prefix P() covers every leaf)
+        state_spec["telemetry"] = P()
     return _round, state_spec, X, Y
 
 

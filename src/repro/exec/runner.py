@@ -49,10 +49,12 @@ class ShardedSweepRunner(SweepRunner):
     def __init__(self, scenarios: Sequence[Union[str, Scenario]],
                  seeds=1, quick: bool = False, keep_state: bool = False,
                  mesh: Union[str, tuple] = "1x1",
-                 driver: str = "stepwise", warmup: bool = False):
+                 driver: str = "stepwise", warmup: bool = False,
+                 telemetry: bool = False, trace=None):
         super().__init__(scenarios, seeds=seeds, quick=quick,
                          keep_state=keep_state, batch="map",
-                         driver=driver, warmup=warmup)
+                         driver=driver, warmup=warmup,
+                         telemetry=telemetry, trace=trace)
         self.mesh_shape = parse_mesh(mesh)
         self.mesh = make_device_mesh(self.mesh_shape)
 
@@ -61,9 +63,13 @@ class ShardedSweepRunner(SweepRunner):
         scenario's (C, M) workload (identity when the mesh divides)."""
         return pad_plan(topo.C, topo.M, self.mesh_shape)
 
-    def _init_states(self, params, opt, topo):
+    def _init_states(self, params, opt, topo, cfg):
         plan = self._pad_plan(topo)
-        return [init_round_state(p, opt, plan.Cp, plan.Mp) for p in params]
+        # telemetry is computed from the gathered *real* (C, M) values,
+        # so its cluster axis is topo.C even on a padded mesh
+        tele_C = topo.C if cfg.telemetry else None
+        return [init_round_state(p, opt, plan.Cp, plan.Mp,
+                                 telemetry_C=tele_C) for p in params]
 
     def _finalize_state(self, state, topo):
         """Strip the padded opt rows/cols (leading axis is the seed

@@ -166,6 +166,12 @@ class ParticipationSchedule:
         return np.stack([np.asarray(self.present(t, C, M))
                          for t in range(T)])
 
+    def attendance_fraction(self, t, C: int, M: int) -> jnp.ndarray:
+        """Scalar realized attendance fraction for round ``t`` —
+        ``mean(present(t))``; the host-side oracle for the in-program
+        ``attendance`` diagnostic (`repro.obs.telemetry`)."""
+        return jnp.mean(self.present(t, C, M))
+
 
 @dataclass
 class ClientState:
@@ -181,6 +187,7 @@ class ClientPool:
     X: np.ndarray
     Y: np.ndarray
     clients: List[ClientState] = field(default_factory=list)
+    rounds_seen: int = 0              # rounds accounted via mark_round
 
     def __post_init__(self):
         if not self.clients:
@@ -206,6 +213,7 @@ class ClientPool:
         `ParticipationSchedule.history`) only clients whose entry is
         nonzero are counted."""
         if mask is None:
+            self.rounds_seen += 1
             for cl in self.clients:
                 cl.rounds_participated += 1
             return
@@ -213,8 +221,19 @@ class ClientPool:
         if m.shape != (self.C, self.M):
             raise ValueError(
                 f"mask shape {m.shape} != (C, M) = {(self.C, self.M)}")
+        self.rounds_seen += 1
         for cl in self.clients:
             cl.rounds_participated += int(m[cl.cluster, cl.index] != 0)
+
+    def attendance_fractions(self) -> np.ndarray:
+        """[C, M] float32 per-client realized attendance over the
+        rounds accounted so far (1.0 everywhere before any round)."""
+        out = np.ones((self.C, self.M), np.float32)
+        if self.rounds_seen:
+            for cl in self.clients:
+                out[cl.cluster, cl.index] = (cl.rounds_participated
+                                             / self.rounds_seen)
+        return out
 
     def label_histogram(self, n_classes: int = 10) -> np.ndarray:
         """[C, M, n_classes] label counts — used to verify the paper's

@@ -1,0 +1,27 @@
+"""`repro.obs` — observability for the W-HFL reproduction.
+
+Three layers, consumed bottom-up:
+
+- `repro.obs.telemetry` — in-program round diagnostics: an optional,
+  statically-gated pytree of the paper's physical-layer quantities
+  (per-cluster receive SNR and noise floor, pre/post-OTA gradient-norm
+  ratio, realized attendance, per-tier symbol energy) computed inside
+  the round function of BOTH execution engines from values they
+  already materialize.  `WHFLConfig.telemetry=False` (default) is a
+  Python-level gate: the traced program is then *literally identical*
+  to a build without telemetry (bitwise; pinned by tests/test_obs.py,
+  the same discipline as the participation no-op).
+- `repro.obs.trace` — host-side structured run journal: JSONL typed
+  events (schema ``repro.obs.trace/v1``) from the sweep engine —
+  scenario start/end, compiles (via the `n_traces` counter), per-window
+  dispatch timings, telemetry summaries.  `python -m repro.obs.trace
+  FILE` validates a journal against the schema.
+- `repro.obs.diff` — drift/parity audit: ULP-aware comparison of two
+  sweep/bench JSON documents (`python -m repro.obs.diff a.json b.json
+  --max-ulp 1`), the CI gate for the cross-engine/mesh/driver parity
+  matrices.
+
+Submodules are imported explicitly (``from repro.obs import diff``) —
+this package intentionally re-exports nothing, so the numpy-only
+`diff` CLI never pays a jax import.
+"""

@@ -91,6 +91,9 @@ class Scenario:
     n_free_riders: int = 0
     cluster_agg: str = "mean"        # "mean" | "median" | "trimmed_mean"
     agg_trim: float = 0.25
+    # in-program diagnostics (repro.obs.telemetry); False is a
+    # Python-level no-op — the compiled round is bitwise unchanged
+    telemetry: bool = False
 
     # -- derived ------------------------------------------------------------
 
@@ -116,7 +119,8 @@ class Scenario:
                           power_low=(self.I == 1),
                           participation=self.participation_schedule(),
                           cluster_agg=self.cluster_agg,
-                          agg_trim=self.agg_trim)
+                          agg_trim=self.agg_trim,
+                          telemetry=self.telemetry)
 
     def make_topology(self) -> Topology:
         if self.topology == "uniform":

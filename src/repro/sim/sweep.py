@@ -24,7 +24,11 @@ device-resident chunked driver (`lax.scan` per eval window, donated
 carry buffers, async metric fetch — bitwise equal to stepwise under
 ``--batch map``); `--bench-out` additionally writes the
 ``BENCH_sweep.json`` throughput trajectory (rounds/sec per scenario +
-engine/driver metadata).
+engine/driver metadata); `--telemetry` records the in-program
+physical-layer diagnostics block (`repro.obs.telemetry` — off by
+default, and off is a bitwise no-op), `--trace` journals the run as
+`repro.obs.trace/v1` JSONL, and `--profile DIR` wraps the sweep in
+``jax.profiler.trace``.
 
 Output is a structured JSON document (`SCHEMA_VERSION`), and
 `csv_lines` renders the benchmark-suite CSV convention
@@ -38,7 +42,7 @@ import json
 import os
 import time
 import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Union
 
 import jax
@@ -50,6 +54,7 @@ from repro.core.topology import power_schedule
 from repro.core.whfl import (eval_windows, init_round_state, make_chunk_fn,
                              make_round_fn)
 from repro.nn.core import split_params
+from repro.obs.telemetry import TELEMETRY_KEYS, summarize
 from repro.optim import adam, sgd
 from repro.sim.scenario import Scenario, get_scenario, list_scenarios
 
@@ -82,8 +87,10 @@ BENCH_SCHEMA_VERSION = "repro.bench.sweep/v1"
 DRIVERS = ("stepwise", "chunked")
 
 # Every per-scenario record carries exactly these keys (tests pin them).
+# "telemetry" is null unless the sweep ran with telemetry=True (the
+# record key is always present so the schema stays fixed-shape).
 RECORD_KEYS = ("scenario", "seeds", "rounds", "metrics", "final",
-               "n_traces", "seconds", "exec")
+               "n_traces", "seconds", "exec", "telemetry")
 METRIC_KEYS = ("acc", "loss", "edge_power", "is_power")
 
 
@@ -100,6 +107,9 @@ class SweepResult:
     n_traces: int                     # jit traces of the round function
     seconds: float
     exec_info: Dict = field(default_factory=dict)
+    # field-major telemetry trajectories {key: [S][n_evals](scalar|[C])}
+    # — populated iff the scenario ran with cfg.telemetry=True
+    telemetry: Optional[Dict] = field(default=None, repr=False)
     final_state: Optional[dict] = field(default=None, repr=False)
 
     def to_record(self) -> Dict:
@@ -121,6 +131,7 @@ class SweepResult:
             "n_traces": self.n_traces,
             "seconds": self.seconds,
             "exec": dict(self.exec_info),
+            "telemetry": self.telemetry,
         }
 
 
@@ -145,11 +156,21 @@ class SweepRunner:
                  seeds: Union[int, Sequence[int]] = 1,
                  quick: bool = False, keep_state: bool = False,
                  batch: str = "vmap", driver: str = "stepwise",
-                 warmup: bool = False):
+                 warmup: bool = False, telemetry: bool = False,
+                 trace=None):
         self.scenarios = [get_scenario(s) if isinstance(s, str) else s
                           for s in scenarios]
         if quick:
             self.scenarios = [s.quick() for s in self.scenarios]
+        # telemetry=True rewrites the scenario configs themselves, so
+        # records carry the flag and `whfl_config()` turns the gate on
+        if telemetry:
+            self.scenarios = [replace(s, telemetry=True)
+                              for s in self.scenarios]
+        self.telemetry = telemetry
+        # optional repro.obs.trace.TraceWriter (duck-typed: anything
+        # with .emit(event, **fields)); None disables journaling
+        self.trace = trace
         self.seeds = (list(range(seeds)) if isinstance(seeds, int)
                       else list(seeds))
         self.quick = quick
@@ -167,13 +188,28 @@ class SweepRunner:
         # execution, not trace/compile time.
         self.warmup = warmup
 
+    def _emit(self, event: str, **fields) -> None:
+        """Journal one `repro.obs.trace` event (no-op without --trace)."""
+        if self.trace is not None:
+            self.trace.emit(event, **fields)
+
+    def _note_traces(self, counter, seen: List[int]) -> None:
+        """Journal a ``compile`` event when the trace counter moved
+        since the last call (i.e. a program was (re)traced)."""
+        if counter[0] > seen[0]:
+            self._emit("compile", n_traces=counter[0],
+                       new=counter[0] - seen[0])
+            seen[0] = counter[0]
+
     # -- engine hooks (overridden by repro.exec.ShardedSweepRunner) ---------
 
-    def _init_states(self, params, opt, topo):
+    def _init_states(self, params, opt, topo, cfg):
         """Per-seed initial round states.  Engine hook: the sharded
         engine sizes the per-user ``opt`` axes to its mesh's padded
         (Cp, Mp) grid when the mesh does not divide (C, M)."""
-        return [init_round_state(p, opt, topo.C, topo.M) for p in params]
+        tele_C = topo.C if cfg.telemetry else None
+        return [init_round_state(p, opt, topo.C, topo.M,
+                                 telemetry_C=tele_C) for p in params]
 
     def _finalize_state(self, state, topo):
         """The state view stored as ``final_state``.  Engine hook: the
@@ -241,12 +277,16 @@ class SweepRunner:
     # -- one scenario, all seeds at once ------------------------------------
 
     def run_scenario(self, sc: Scenario) -> SweepResult:
-        t0 = time.time()
+        t0 = time.perf_counter()
         init_fn, apply_fn, loss_fn = sc.task_fns()
         X, Y, xte, yte = sc.make_data()
         topo = sc.make_topology()
         cfg = sc.whfl_config()
         opt = adam(sc.lr) if sc.opt == "adam" else sgd(sc.lr)
+        self._emit("scenario_start", scenario=sc.name,
+                   seeds=len(self.seeds), rounds=sc.rounds,
+                   driver=self.driver, telemetry=cfg.telemetry,
+                   exec_info=self._exec_info(topo))
 
         # Stacked per-seed state: identical-by-construction to S
         # independent `init_state` calls.
@@ -254,7 +294,7 @@ class SweepRunner:
                   for s in self.seeds]
         spec = agg.make_flat_spec(params[0])
         counter = [0]
-        states = self._init_states(params, opt, topo)
+        states = self._init_states(params, opt, topo, cfg)
         state = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
         keys = jnp.stack([jax.random.PRNGKey(s + 1) for s in self.seeds])
 
@@ -275,13 +315,16 @@ class SweepRunner:
         loss_t = [[] for _ in range(S)]
         pe_t = [[] for _ in range(S)]
         pi_t = [[] for _ in range(S)]
+        tele_acc: List[Dict] = []     # one telemetry pytree per eval
 
-        def record(accs, losses, pe, pi):
+        def record(accs, losses, pe, pi, tele=None):
             for s in range(S):
                 acc_t[s].append(float(accs[s]))
                 loss_t[s].append(float(losses[s]))
                 pe_t[s].append(float(pe[s]))
                 pi_t[s].append(float(pi[s]))
+            if tele is not None:
+                tele_acc.append(tele)
 
         if self.driver == "chunked":
             state, dispatches, drive_s = self._drive_chunked(
@@ -292,14 +335,31 @@ class SweepRunner:
                 sc, loss_fn, opt, topo, cfg, spec, X, Y, counter, _eval,
                 state, keys, T, rounds, record)
 
+        # field-major [S][n_evals] trajectories; per-eval leaves are
+        # scalars or [C] lists, same layout as the metrics block
+        telemetry = None
+        if tele_acc:
+            telemetry = {
+                k: [[np.asarray(t[k][s]).tolist() for t in tele_acc]
+                    for s in range(S)]
+                for k in TELEMETRY_KEYS}
+            for rd, t in zip(rounds, tele_acc):
+                self._emit("telemetry", scenario=sc.name, round=rd,
+                           summary=summarize(t))
+
         exec_info = {**self._exec_info(topo), "driver": self.driver,
                      "dispatches": dispatches, "drive_seconds": drive_s,
                      "warmup": self.warmup}
+        seconds = time.perf_counter() - t0
+        self._emit("scenario_end", scenario=sc.name, seconds=seconds,
+                   drive_seconds=drive_s, dispatches=dispatches,
+                   n_traces=counter[0],
+                   final_acc_mean=float(np.mean([a[-1] for a in acc_t])))
         return SweepResult(
             scenario=sc, seeds=self.seeds, rounds=rounds, acc=acc_t,
             loss=loss_t, edge_power=pe_t, is_power=pi_t,
-            n_traces=counter[0], seconds=time.time() - t0,
-            exec_info=exec_info,
+            n_traces=counter[0], seconds=seconds,
+            exec_info=exec_info, telemetry=telemetry,
             final_state=(self._finalize_state(state, topo)
                          if self.keep_state else None))
 
@@ -325,8 +385,11 @@ class SweepRunner:
                          P_is0),
                  eval_b(state["theta"])))
 
+        tele_on = cfg.telemetry
         dispatches = 0
-        t_drive = time.time()
+        seen = [counter[0]]
+        t_drive = time.perf_counter()
+        win_t0, win_rounds = t_drive, 0
         for t in range(T):
             P_t, P_is_t = power_schedule(
                 t, cfg.power_base, cfg.power_slope, cfg.power_is_factor,
@@ -335,6 +398,7 @@ class SweepRunner:
             keys, subs = ks[:, 0], ks[:, 1]
             state = round_b(state, subs, P_t, P_is_t)
             dispatches += 2
+            win_rounds += 1
             if t % sc.eval_every == 0 or t == T - 1:
                 accs, losses = eval_b(state["theta"])
                 dispatches += 1
@@ -343,10 +407,18 @@ class SweepRunner:
                                 / jnp.maximum(state["n_edge_tx"], 1.0))
                 pi = np.asarray(state["power_is"]
                                 / jnp.maximum(state["n_is_tx"], 1.0))
+                tele = (jax.device_get(state["telemetry"]) if tele_on
+                        else None)
                 rounds.append(t + 1)
-                record(accs, losses, pe, pi)
+                record(accs, losses, pe, pi, tele)
+                self._note_traces(counter, seen)
+                now = time.perf_counter()
+                self._emit("window", scenario=sc.name, round=t + 1,
+                           rounds=win_rounds,
+                           seconds=round(now - win_t0, 6))
+                win_t0, win_rounds = now, 0
         jax.block_until_ready(state)
-        return state, dispatches, time.time() - t_drive
+        return state, dispatches, time.perf_counter() - t_drive
 
     # -- the chunked driver: one dispatch per eval window -------------------
 
@@ -357,10 +429,15 @@ class SweepRunner:
         [T] power schedule, donated carry buffers, and asynchronous
         metric fetch — every window is enqueued without a host sync,
         and ONE `device_get` at the end transfers all metrics."""
+        tele_on = cfg.telemetry   # Python-level: off-path programs are
+                                  # byte-identical to pre-telemetry ones
+
         def eval_state(st):   # per-seed metrics, folded into the chunk
             acc, loss = _eval(st["theta"])
             pe = st["power_edge"] / jnp.maximum(st["n_edge_tx"], 1.0)
             pi = st["power_is"] / jnp.maximum(st["n_is_tx"], 1.0)
+            if tele_on:   # ride the same async fetch as the metrics
+                return acc, loss, pe, pi, st["telemetry"]
             return acc, loss, pe, pi
 
         chunk_b = self._build_chunk(sc, loss_fn, opt, topo, cfg, spec, X, Y,
@@ -382,20 +459,29 @@ class SweepRunner:
                         jax.tree.map(jnp.copy, state), jnp.copy(keys),
                         P_all[:w], P_is_all[:w]))
 
-            t_drive = time.time()
+            seen = [counter[0]]
+            t_drive = time.perf_counter()
             pending, off = [], 0
             for w in windows:
+                w_t0 = time.perf_counter()
                 state, keys, metrics = chunk_b(state, keys,
                                                P_all[off:off + w],
                                                P_is_all[off:off + w])
                 off += w
                 rounds.append(off)
                 pending.append(metrics)
+                self._note_traces(counter, seen)
+                # enqueue latency only: this driver is async by design
+                # (one device sync per scenario), so execution time is
+                # not observable per window
+                self._emit("window", scenario=sc.name, round=off,
+                           rounds=w, enqueue_only=True,
+                           seconds=round(time.perf_counter() - w_t0, 6))
             # one sync: block on the last chunk, then transfer every
             # window's metrics (all already resident on device)
             for metrics in jax.device_get(pending):
                 record(*metrics)
-        return state, len(windows), time.time() - t_drive
+        return state, len(windows), time.perf_counter() - t_drive
 
     # -- the sweep -----------------------------------------------------------
 
@@ -502,6 +588,21 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
                          "2x4); on CPU force host devices with "
                          "XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="compute the in-program per-round diagnostics "
+                         "block (repro.obs.telemetry: per-hop SNR, noise "
+                         "floor, grad-norm ratio, attendance, symbol "
+                         "energies) and record its per-eval trajectories; "
+                         "off (the default) the compiled programs are "
+                         "bitwise identical to a build without the "
+                         "feature")
+    ap.add_argument("--trace", default=None, metavar="OUT_JSONL",
+                    help="write a structured JSONL run journal "
+                         "(repro.obs.trace/v1 events: compiles, per-"
+                         "window timings, telemetry summaries) here")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="wrap the sweep in jax.profiler.trace(DIR) "
+                         "(view with TensorBoard / xprof)")
     ap.add_argument("--out", default=None, help="write JSON document here")
     ap.add_argument("--bench-out", default=None,
                     help="write the BENCH_sweep.json throughput document "
@@ -520,19 +621,32 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
 
     seeds = ([int(s) for s in args.seed_list.split(",")]
              if args.seed_list else args.seeds)
+    tracer = None
+    if args.trace:
+        from repro.obs.trace import TraceWriter   # lazy: obs layer
+        tracer = TraceWriter(args.trace)
+    profile_cm = (jax.profiler.trace(args.profile) if args.profile
+                  else contextlib.nullcontext())
     results = []
-    for driver in args.driver.split(","):
-        try:
-            # lazy import: repro.exec builds on this module
-            from repro.exec import make_runner
-            runner = make_runner(args.exec_name, args.scenarios.split(","),
-                                 seeds=seeds, quick=args.quick,
-                                 batch=args.batch, mesh=args.mesh,
-                                 driver=driver.strip(),
-                                 warmup=args.warmup)
-        except (KeyError, ValueError) as e:
-            ap.error(str(e.args[0] if e.args else e))
-        results.extend(runner.run())
+    with profile_cm:
+        for driver in args.driver.split(","):
+            try:
+                # lazy import: repro.exec builds on this module
+                from repro.exec import make_runner
+                runner = make_runner(args.exec_name,
+                                     args.scenarios.split(","),
+                                     seeds=seeds, quick=args.quick,
+                                     batch=args.batch, mesh=args.mesh,
+                                     driver=driver.strip(),
+                                     warmup=args.warmup,
+                                     telemetry=args.telemetry,
+                                     trace=tracer)
+            except (KeyError, ValueError) as e:
+                ap.error(str(e.args[0] if e.args else e))
+            results.extend(runner.run())
+    if tracer is not None:
+        tracer.close()
+        print("wrote", args.trace)
     doc = sweep_to_json(results, quick=args.quick)
     for line in csv_lines(doc):
         print(line)
