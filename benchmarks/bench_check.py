@@ -195,6 +195,25 @@ def run_provenance() -> Dict:
     }
 
 
+def _trajectory_record(r: Dict) -> Dict:
+    """One trajectory entry per sweep record.  Runs that checkpointed
+    (``--checkpoint``, PR 8) additionally carry the save/load wall-time
+    so the overhead of cutting checkpoints is tracked run over run;
+    plain runs keep the exact historical record shape."""
+    ex = r.get("exec", {})
+    rec = {"scenario": r["scenario"],
+           "exec": ex.get("name"),
+           "driver": r.get("driver", ex.get("driver")),
+           "mesh": ex.get("mesh"),
+           "rounds_per_sec": r.get("rounds_per_sec"),
+           "dispatches": r.get("dispatches")}
+    if ex.get("ckpt_saves") is not None:
+        rec["ckpt"] = {"saves": ex.get("ckpt_saves"),
+                       "save_seconds": ex.get("ckpt_save_seconds"),
+                       "load_seconds": ex.get("ckpt_load_seconds")}
+    return rec
+
+
 def append_trajectory(path: str, fresh: List[Dict], passed: bool,
                       run_id: str, timestamp: str,
                       provenance: Dict = None) -> None:
@@ -223,15 +242,7 @@ def append_trajectory(path: str, fresh: List[Dict], passed: bool,
         "passed": passed,
         "provenance": provenance if provenance is not None
         else run_provenance(),
-        "records": [
-            {"scenario": r["scenario"],
-             "exec": r.get("exec", {}).get("name"),
-             "driver": r.get("driver", r.get("exec", {}).get("driver")),
-             "mesh": r.get("exec", {}).get("mesh"),
-             "rounds_per_sec": r.get("rounds_per_sec"),
-             "dispatches": r.get("dispatches")}
-            for r in fresh
-        ],
+        "records": [_trajectory_record(r) for r in fresh],
     }
     doc["runs"].append(entry)
     with open(path, "w") as f:

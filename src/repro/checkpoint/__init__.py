@@ -1,3 +1,4 @@
-from repro.checkpoint.store import latest, load, save, save_step
+from repro.checkpoint.store import (latest, load, read_meta, save,
+                                    save_step)
 
-__all__ = ["save", "load", "latest", "save_step"]
+__all__ = ["save", "load", "latest", "read_meta", "save_step"]

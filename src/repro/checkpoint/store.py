@@ -1,15 +1,24 @@
 """Pytree checkpointing without external deps.
 
 Arrays are stored in a single .npz; the tree structure (dict/list/tuple
-nesting + leaf dtypes) is stored as JSON alongside.  Handles the full
-trainer state (params, optimizer moments, step counters, RNG keys).
+nesting + leaf dtypes/shapes) is stored as JSON alongside and VALIDATED
+on load — a checkpoint written for one trainer state cannot silently
+load into another (dtype, shape, leaf-count and treedef mismatches all
+raise instead of `astype`-casting).  Handles the full trainer state
+(params, optimizer moments, step counters, uint32 RNG keys).
+
+`save` is atomic (tempfile + `os.replace` in the target directory), so
+a crash mid-write leaves either the previous checkpoint or none — never
+a torn file.  `save(meta=...)` attaches an arbitrary JSON document to
+the same .npz (read back with `read_meta`); `repro.ft.ckpt` uses it for
+the resume manifest.
 """
 from __future__ import annotations
 
 import json
 import os
 import tempfile
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -24,34 +33,70 @@ def _flatten_with_paths(tree) -> Tuple[Dict[str, np.ndarray], Any]:
     return flat, treedef
 
 
-def save(path: str, tree) -> None:
-    """Atomic save of a pytree of arrays to `path` (.npz)."""
+def save(path: str, tree, meta: Optional[Dict] = None) -> None:
+    """Atomic save of a pytree of arrays to `path` (.npz).
+
+    `meta` (optional) is any JSON-serializable document stored
+    alongside the leaves (see `read_meta`).
+    """
     flat, treedef = _flatten_with_paths(tree)
-    meta = {"treedef": str(treedef), "n_leaves": len(flat)}
+    doc = {"treedef": str(treedef), "n_leaves": len(flat),
+           "dtypes": [str(a.dtype) for a in flat.values()],
+           "shapes": [list(a.shape) for a in flat.values()]}
+    if meta is not None:
+        doc["extra"] = meta
     d = os.path.dirname(path) or "."
     os.makedirs(d, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
     try:
         with os.fdopen(fd, "wb") as f:
-            np.savez(f, __meta__=json.dumps(meta), **flat)
+            np.savez(f, __meta__=json.dumps(doc), **flat)
         os.replace(tmp, path)
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
 
 
-def load(path: str, like):
-    """Load into the structure of `like` (a template pytree)."""
+def read_meta(path: str) -> Dict:
+    """The stored metadata document: treedef/n_leaves/dtypes/shapes
+    plus the caller's ``"extra"`` dict when `save` got `meta=`."""
     with np.load(path, allow_pickle=False) as z:
-        leaves = [z[f"leaf_{i}"] for i in range(len(z.files) - 1)]
+        return json.loads(str(z["__meta__"]))
+
+
+def load(path: str, like):
+    """Load into the structure of `like` (a template pytree).
+
+    The stored treedef, leaf count and per-leaf dtypes/shapes must all
+    match the template exactly — any mismatch raises ``ValueError``
+    (a checkpoint never silently casts into a different state)."""
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        n = meta["n_leaves"]
+        if len(z.files) - 1 != n:
+            raise ValueError(
+                f"corrupt checkpoint {path!r}: metadata claims {n} "
+                f"leaves, file holds {len(z.files) - 1}")
+        leaves = [z[f"leaf_{i}"] for i in range(n)]
     template_leaves, treedef = jax.tree.flatten(like)
-    if len(leaves) != len(template_leaves):
+    if n != len(template_leaves):
         raise ValueError(
-            f"checkpoint has {len(leaves)} leaves, template has "
+            f"checkpoint has {n} leaves, template has "
             f"{len(template_leaves)}")
-    out = [np.asarray(l).astype(t.dtype) if hasattr(t, "dtype") else l
-           for l, t in zip(leaves, template_leaves)]
-    return jax.tree.unflatten(treedef, out)
+    if meta["treedef"] != str(treedef):
+        raise ValueError(
+            f"checkpoint treedef mismatch:\n  stored:   "
+            f"{meta['treedef']}\n  template: {treedef}")
+    for i, (leaf, t) in enumerate(zip(leaves, template_leaves)):
+        if hasattr(t, "dtype") and leaf.dtype != np.dtype(t.dtype):
+            raise ValueError(
+                f"checkpoint leaf_{i} dtype {leaf.dtype} != template "
+                f"{np.dtype(t.dtype)}")
+        if hasattr(t, "shape") and tuple(leaf.shape) != tuple(t.shape):
+            raise ValueError(
+                f"checkpoint leaf_{i} shape {tuple(leaf.shape)} != "
+                f"template {tuple(t.shape)}")
+    return jax.tree.unflatten(treedef, leaves)
 
 
 def latest(dirpath: str, prefix: str = "ckpt_") -> str | None:
@@ -65,13 +110,15 @@ def latest(dirpath: str, prefix: str = "ckpt_") -> str | None:
         dirpath, max(cands, key=lambda f: int(f[len(prefix):-4])))
 
 
-def save_step(dirpath: str, step: int, tree, keep: int = 3) -> str:
-    """Save `ckpt_<step>.npz` and prune old checkpoints."""
-    path = os.path.join(dirpath, f"ckpt_{step}.npz")
-    save(path, tree)
+def save_step(dirpath: str, step: int, tree, keep: int = 3,
+              prefix: str = "ckpt_", meta: Optional[Dict] = None) -> str:
+    """Save `<prefix><step>.npz` and prune old checkpoints with the
+    same prefix (numeric step order, keeping the newest `keep`)."""
+    path = os.path.join(dirpath, f"{prefix}{step}.npz")
+    save(path, tree, meta=meta)
     cands = sorted([f for f in os.listdir(dirpath)
-                    if f.startswith("ckpt_") and f.endswith(".npz")],
-                   key=lambda f: int(f[5:-4]))
+                    if f.startswith(prefix) and f.endswith(".npz")],
+                   key=lambda f: int(f[len(prefix):-4]))
     for f in cands[:-keep]:
         os.unlink(os.path.join(dirpath, f))
     return path

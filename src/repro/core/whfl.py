@@ -20,7 +20,7 @@ FL, the paper's main comparison) and `OTAConfig(mode="ideal")`
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import TYPE_CHECKING, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +36,9 @@ from repro.obs.telemetry import (cluster_telemetry, edge_telemetry_init,
                                  is_telemetry, is_telemetry_zero,
                                  telemetry_init)
 from repro.optim import Optimizer, apply_updates
+
+if TYPE_CHECKING:   # annotation-only: repro.ft imports this layer
+    from repro.ft.faults import GradPoison
 
 CLUSTER_AGGREGATORS = ("mean", "median", "trimmed_mean")
 
@@ -68,6 +71,15 @@ class WHFLConfig:
     # pre-telemetry program (bitwise; same discipline as the
     # participation no-op above, pinned by tests/test_obs.py)
     telemetry: bool = False
+    # non-finite guard over post-OTA estimates (repro.ft.guard):
+    # "off" | "halt" | "skip_round" | "zero_fill".  "off" is the same
+    # PYTHON-level gate as telemetry — the traced program is literally
+    # the unguarded one (pinned by tests/test_ft.py)
+    guard: str = "off"
+    # deterministic fault injection (repro.ft.faults.GradPoison):
+    # poison user (c, m)'s transmitted flat with NaN/Inf at round t.
+    # None (default) inserts nothing (Python-level gate again)
+    poison: Optional[GradPoison] = None
 
 
 def validate_participation(cfg: WHFLConfig) -> None:
@@ -97,13 +109,17 @@ def validate_participation(cfg: WHFLConfig) -> None:
 
 
 def init_round_state(params, opt: Optimizer, C: int, M: int,
-                     telemetry_C: Optional[int] = None):
+                     telemetry_C: Optional[int] = None,
+                     guard: bool = False):
     """Fresh per-run trainer state for `make_round_fn` round functions.
 
     ``telemetry_C`` (the REAL cluster count — not a mesh-padded one)
     adds the zeroed ``"telemetry"`` diagnostics block for
     ``WHFLConfig.telemetry=True`` round functions; leave it None for
     the default telemetry-off state, which is unchanged bitwise.
+    ``guard=True`` (for ``WHFLConfig.guard != "off"`` round functions)
+    adds the ``"guard_trips"`` int32 counter of non-finite guard trips
+    (`repro.ft.guard`); the False default likewise changes nothing.
     """
     opt0 = opt.init(params)
     opt_state = jax.tree.map(
@@ -119,6 +135,8 @@ def init_round_state(params, opt: Optimizer, C: int, M: int,
     }
     if telemetry_C is not None:
         state["telemetry"] = telemetry_init(telemetry_C)
+    if guard:
+        state["guard_trips"] = jnp.zeros((), jnp.int32)
     return state
 
 
@@ -186,6 +204,34 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
     # one op below changes (repro.obs.telemetry; the fence-isolated
     # diagnostics are only *added*, never interleaved, when True)
     tele_on = cfg.telemetry
+    # ... and so are the fault-tolerance gates (repro.ft): guard "off"
+    # and poison None trace the literally identical program.  Deferred
+    # import: repro.ft.guard sits above this layer (it pulls
+    # repro.core.aggregation), so a module-level import would cycle.
+    from repro.ft.guard import guard_estimate, validate_guard
+    validate_guard(cfg.guard)
+    guard_on = cfg.guard != "off"
+    poison = cfg.poison
+    if poison is not None:
+        if poison.c >= C or poison.m >= M:
+            raise ValueError(
+                f"poison targets user ({poison.c}, {poison.m}) outside "
+                f"the ({C}, {M}) grid")
+        _pmask = np.zeros((C, M), bool)
+        _pmask[poison.c, poison.m] = True
+        _pmask = jnp.asarray(_pmask)
+
+    def maybe_poison(flat, step):
+        """Inject the fault-plan's non-finite symbols into the fold
+        input (the transmitted flat deltas) at the poisoned round —
+        *after* power accounting reads `flat`, so injected energies
+        match across engines.  Python-level no-op when poison is None.
+        """
+        if poison is None:
+            return flat
+        hit = jnp.logical_and(step == poison.t, _pmask)
+        return flat + jnp.where(hit, poison.value, 0.0)[..., None]
+
     tx_base = jnp.asarray(schedule.tx_base(C, M)) if partial else None
     # receive weights the attendance rescale renormalizes over: the
     # ideal mean weighs users uniformly, the OTA folds by own-beta
@@ -238,10 +284,13 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
             flat, opt_state = users_train(theta_IS, state["opt"], k1, step)
             if partial:
                 flat = agg.cotaf_precode(flat, mult)
-            est = conventional_ota(k2, flat, topo, P_t, cfg.ota)
+            est = conventional_ota(k2, maybe_poison(flat, step), topo,
+                                   P_t, cfg.ota)
             if partial:
                 est = est * agg.attendance_rescale(
                     rx_w_conv.reshape(-1), claimed.reshape(-1))
+            if guard_on:
+                est, g_trip = guard_estimate(est, cfg.guard)
             theta = apply_updates(theta, agg.unflatten(spec, est))
             p_edge = agg.symbol_power(flat, P_t)
             out = {**state, "theta": theta, "opt": opt_state,
@@ -250,6 +299,8 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
                    "n_edge_tx": state["n_edge_tx"] + 1.0,
                    "power_is": state["power_is"],
                    "n_is_tx": state["n_is_tx"]}
+            if guard_on:
+                out["guard_trips"] = state["guard_trips"] + g_trip
             if tele_on:
                 out["telemetry"] = {
                     **cluster_telemetry(flat, est, claimed, topo, P_t,
@@ -262,35 +313,46 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
             lambda x: jnp.broadcast_to(x, (C,) + x.shape), theta)
 
         def cluster_iter(carry, k):
-            if tele_on:  # the last cluster iteration's block survives
-                th_IS, opt_state, p_acc, _ = carry
-            else:
-                th_IS, opt_state, p_acc = carry
+            th_IS, opt_state, p_acc = carry[:3]
+            g_acc = carry[3] if guard_on else None
             k1, k2 = jax.random.split(k)
             flat, opt_state = users_train(th_IS, opt_state, k1, step)
             if partial:
                 flat = agg.cotaf_precode(flat, mult)
-            est = cluster_fold(k2, flat, claimed, P_t)      # [C, 2N]
+            est = cluster_fold(k2, maybe_poison(flat, step), claimed,
+                               P_t)                         # [C, 2N]
+            if guard_on:
+                est, g_trip = guard_estimate(est, cfg.guard)
+                g_acc = g_acc + g_trip
             th_IS = jax.vmap(
                 lambda th, e: apply_updates(th, agg.unflatten(spec, e))
             )(th_IS, est)
             out = (th_IS, opt_state,
                    p_acc + agg.symbol_power(flat, P_t))
+            if guard_on:
+                out += (g_acc,)
             if tele_on:
+                # the last cluster iteration's block survives
                 out += (cluster_telemetry(flat, est, claimed, topo, P_t),)
             return out, None
 
         keys = jax.random.split(key, cfg.I + 1)
         carry0 = (theta_IS, state["opt"], jnp.zeros(()))
+        if guard_on:
+            carry0 += (jnp.zeros((), jnp.int32),)
         if tele_on:
             carry0 += (edge_telemetry_init(C),)
         carry, _ = jax.lax.scan(cluster_iter, carry0, keys[: cfg.I])
         theta_IS, opt_state, p_edge = carry[:3]
+        g_edge = carry[3] if guard_on else None
+        tele_blk = carry[3 + int(guard_on)] if tele_on else None
 
         is_deltas = jax.vmap(
             lambda th: agg.flatten(
                 spec, jax.tree.map(lambda a, b: a - b, th, theta)))(theta_IS)
         est = global_ota(keys[-1], is_deltas, topo, P_is_t, cfg.ota)
+        if guard_on:
+            est, g_is = guard_estimate(est, cfg.guard)
         theta = apply_updates(theta, agg.unflatten(spec, est))
         p_is = agg.symbol_power(is_deltas, P_is_t)
         out = {**state, "theta": theta, "opt": opt_state, "t": step + 1,
@@ -298,8 +360,10 @@ def make_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
                "n_edge_tx": state["n_edge_tx"] + float(cfg.I),
                "power_is": state["power_is"] + p_is,
                "n_is_tx": state["n_is_tx"] + 1.0}
+        if guard_on:
+            out["guard_trips"] = state["guard_trips"] + g_edge + g_is
         if tele_on:
-            out["telemetry"] = {**carry[3],
+            out["telemetry"] = {**tele_blk,
                                 **is_telemetry(is_deltas, topo, P_is_t)}
         return out
 
@@ -407,7 +471,8 @@ class WHFLTrainer:
             self._round = jax.jit(self.round_fn)
         return init_round_state(
             params, self.opt, self.C, self.M,
-            telemetry_C=self.C if self.cfg.telemetry else None)
+            telemetry_C=self.C if self.cfg.telemetry else None,
+            guard=self.cfg.guard != "off")
 
     # -- public API ------------------------------------------------------------
 

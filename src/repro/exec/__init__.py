@@ -40,18 +40,25 @@ def make_runner(exec_name: str, scenarios: Sequence[Union[str, Scenario]],
                 mesh: Union[str, tuple] = "1x1",
                 keep_state: bool = False, driver: str = "stepwise",
                 warmup: bool = False, telemetry: bool = False,
-                trace=None) -> SweepRunner:
+                trace=None, checkpoint=None, ckpt_every: int = 1,
+                resume: bool = False, guard: str = "off",
+                faults=None) -> SweepRunner:
     """Engine factory behind the ``--exec`` CLI flag."""
     if exec_name == "single":
         return SweepRunner(scenarios, seeds=seeds, quick=quick,
                            keep_state=keep_state, batch=batch,
                            driver=driver, warmup=warmup,
-                           telemetry=telemetry, trace=trace)
+                           telemetry=telemetry, trace=trace,
+                           checkpoint=checkpoint, ckpt_every=ckpt_every,
+                           resume=resume, guard=guard, faults=faults)
     if exec_name == "sharded":
         return ShardedSweepRunner(scenarios, seeds=seeds, quick=quick,
                                   keep_state=keep_state, mesh=mesh,
                                   driver=driver, warmup=warmup,
-                                  telemetry=telemetry, trace=trace)
+                                  telemetry=telemetry, trace=trace,
+                                  checkpoint=checkpoint,
+                                  ckpt_every=ckpt_every, resume=resume,
+                                  guard=guard, faults=faults)
     raise ValueError(
         f"unknown execution engine {exec_name!r}; known: "
         f"{', '.join(ENGINES)}")

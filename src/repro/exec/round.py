@@ -72,6 +72,7 @@ from repro.core.topology import Topology
 from repro.core.whfl import (WHFLConfig, make_local_train,
                              validate_participation)
 from repro.exec.mesh import pad_plan_for
+from repro.ft.guard import guard_estimate, validate_guard
 from repro.kernels import fused_mac
 from repro.obs.telemetry import (cluster_telemetry, edge_telemetry_init,
                                  is_telemetry, is_telemetry_zero)
@@ -126,6 +127,37 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
     # diagnostics from the *gathered* (real, unpadded) values, so the
     # block is replicated on every shard and mesh-invariant
     tele_on = cfg.telemetry
+    # fault-tolerance gates (repro.ft), Python-level like the single
+    # engine's: guard "off" / poison None insert nothing.  The guard
+    # runs on the REPLICATED [Cp, 2N] estimate — padded rows are
+    # exactly zero (finite), so the trip bit, the zeroing selections
+    # and hence the guarded real rows are identical on every mesh and
+    # to the single engine's [C, 2N] guard.
+    validate_guard(cfg.guard)
+    guard_on = cfg.guard != "off"
+    poison = cfg.poison
+    if poison is not None:
+        if poison.c >= C or poison.m >= M:
+            raise ValueError(
+                f"poison targets user ({poison.c}, {poison.m}) outside "
+                f"the ({C}, {M}) grid")
+        _pmask = np.zeros((C, M), bool)
+        _pmask[poison.c, poison.m] = True
+        _pmask_p = jnp.asarray(plan.pad_users(_pmask))     # [Cp, Mp]
+
+    def maybe_poison_loc(flat_loc, step, ci, ui):
+        """Poison the fold input of this shard's block iff it owns the
+        targeted user — the same per-coordinate `flat + where(...)`
+        the single engine applies, restricted to the local tile, so
+        the poisoned symbols are bitwise cross-engine.  Python-level
+        no-op when poison is None."""
+        if poison is None:
+            return flat_loc
+        mask_loc = jax.lax.dynamic_slice(
+            _pmask_p, (ci * C_loc, ui * M_loc), (C_loc, M_loc))
+        hit = jnp.logical_and(step == poison.t, mask_loc)
+        return flat_loc + jnp.where(hit, poison.value, 0.0)[..., None]
+
     tx_base = jnp.asarray(schedule.tx_base(C, M)) if partial else None
     rx_w = (np.ones((C, M), np.float32) if cfg.ota.mode == "ideal"
             else np.asarray(topo.beta_own, np.float32))
@@ -340,10 +372,14 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
                 theta_IS, state["opt"], k1, step, X_loc, Y_loc, ci, ui,
                 mult_p)
             flat = _gather_cm(flat_loc)
-            est = conventional_ota(k2, flat, topo, P_t, cfg.ota)
+            est = conventional_ota(
+                k2, _gather_cm(maybe_poison_loc(flat_loc, step, ci, ui))
+                if poison is not None else flat, topo, P_t, cfg.ota)
             if partial:
                 est = est * agg.attendance_rescale(
                     rx_w_conv.reshape(-1), claimed.reshape(-1))
+            if guard_on:
+                est, g_trip = guard_estimate(est, cfg.guard)
             theta = apply_updates(theta, agg.unflatten(spec, est))
             out = {**state, "theta": theta, "opt": opt_state,
                    "t": step + 1,
@@ -351,6 +387,8 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
                    "n_edge_tx": state["n_edge_tx"] + 1.0,
                    "power_is": state["power_is"],
                    "n_is_tx": state["n_is_tx"]}
+            if guard_on:
+                out["guard_trips"] = state["guard_trips"] + g_trip
             if tele_on:
                 out["telemetry"] = {
                     **cluster_telemetry(flat, est, claimed, topo, P_t,
@@ -360,20 +398,25 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
 
         # --- W-HFL ---
         def cluster_iter(carry, k):
-            if tele_on:  # the last cluster iteration's block survives
-                th_IS, opt_state, p_acc, _ = carry
-            else:
-                th_IS, opt_state, p_acc = carry
+            th_IS, opt_state, p_acc = carry[:3]
+            g_acc = carry[3] if guard_on else None
             k1, k2 = jax.random.split(k)
             flat_loc, opt_state, pw = users_train(
                 th_IS, opt_state, k1, step, X_loc, Y_loc, ci, ui, mult_p)
-            est = cluster_estimate(k2, flat_loc, P_t, ci, ui,
-                                   claimed)                  # [Cp, 2N]
+            est = cluster_estimate(
+                k2, maybe_poison_loc(flat_loc, step, ci, ui), P_t, ci,
+                ui, claimed)                                 # [Cp, 2N]
+            if guard_on:
+                est, g_trip = guard_estimate(est, cfg.guard)
+                g_acc = g_acc + g_trip
             th_IS = jax.vmap(
                 lambda th, e: apply_updates(th, agg.unflatten(spec, e))
             )(th_IS, est)
             out = (th_IS, opt_state, p_acc + edge_power(pw, P_t))
+            if guard_on:
+                out += (g_acc,)
             if tele_on:
+                # the last cluster iteration's block survives
                 # gathered real [C, M, 2N] deltas + real estimate rows:
                 # the literal single-engine telemetry inputs, computed
                 # replicated (opt-in cost; the off-path has no gather)
@@ -384,10 +427,14 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
 
         keys = jax.random.split(key, cfg.I + 1)
         carry0 = (theta_IS, state["opt"], jnp.zeros(()))
+        if guard_on:
+            carry0 += (jnp.zeros((), jnp.int32),)
         if tele_on:
             carry0 += (edge_telemetry_init(C),)
         carry, _ = jax.lax.scan(cluster_iter, carry0, keys[: cfg.I])
         theta_IS, opt_state, p_edge = carry[:3]
+        g_edge = carry[3] if guard_on else None
+        tele_blk = carry[3 + int(guard_on)] if tele_on else None
 
         # only the real clusters transmit to the PS
         theta_IS_act = (theta_IS if Cp == C else
@@ -397,6 +444,8 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
                 spec,
                 jax.tree.map(lambda a, b: a - b, th, theta)))(theta_IS_act)
         est = global_ota(keys[-1], is_deltas, topo, P_is_t, cfg.ota)
+        if guard_on:
+            est, g_is = guard_estimate(est, cfg.guard)
         theta = apply_updates(theta, agg.unflatten(spec, est))
         p_is = agg.symbol_power(is_deltas, P_is_t)
         out = {**state, "theta": theta, "opt": opt_state, "t": step + 1,
@@ -404,8 +453,10 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
                "n_edge_tx": state["n_edge_tx"] + float(cfg.I),
                "power_is": state["power_is"] + p_is,
                "n_is_tx": state["n_is_tx"] + 1.0}
+        if guard_on:
+            out["guard_trips"] = state["guard_trips"] + g_edge + g_is
         if tele_on:
-            out["telemetry"] = {**carry[3],
+            out["telemetry"] = {**tele_blk,
                                 **is_telemetry(is_deltas, topo, P_is_t)}
         return out
 
@@ -418,6 +469,9 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
         # the whole diagnostics block is computed from gathered values,
         # hence replicated (the tree-prefix P() covers every leaf)
         state_spec["telemetry"] = P()
+    if guard_on:
+        # computed from the replicated estimates, hence replicated
+        state_spec["guard_trips"] = P()
     return _round, state_spec, X, Y
 
 

@@ -18,6 +18,7 @@ from __future__ import annotations
 from typing import Dict, Sequence, Union
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.topology import PadPlan, pad_plan
 from repro.core.whfl import init_round_state
@@ -50,11 +51,15 @@ class ShardedSweepRunner(SweepRunner):
                  seeds=1, quick: bool = False, keep_state: bool = False,
                  mesh: Union[str, tuple] = "1x1",
                  driver: str = "stepwise", warmup: bool = False,
-                 telemetry: bool = False, trace=None):
+                 telemetry: bool = False, trace=None,
+                 checkpoint=None, ckpt_every: int = 1,
+                 resume: bool = False, guard: str = "off", faults=None):
         super().__init__(scenarios, seeds=seeds, quick=quick,
                          keep_state=keep_state, batch="map",
                          driver=driver, warmup=warmup,
-                         telemetry=telemetry, trace=trace)
+                         telemetry=telemetry, trace=trace,
+                         checkpoint=checkpoint, ckpt_every=ckpt_every,
+                         resume=resume, guard=guard, faults=faults)
         self.mesh_shape = parse_mesh(mesh)
         self.mesh = make_device_mesh(self.mesh_shape)
 
@@ -69,18 +74,42 @@ class ShardedSweepRunner(SweepRunner):
         # so its cluster axis is topo.C even on a padded mesh
         tele_C = topo.C if cfg.telemetry else None
         return [init_round_state(p, opt, plan.Cp, plan.Mp,
-                                 telemetry_C=tele_C) for p in params]
+                                 telemetry_C=tele_C,
+                                 guard=cfg.guard != "off")
+                for p in params]
 
     def _finalize_state(self, state, topo):
         """Strip the padded opt rows/cols (leading axis is the seed
         batch) so final states compare tree-equal across engines and
-        meshes."""
+        meshes — this canonical (C, M) view is also what checkpoints
+        store, making a checkpoint mesh-portable."""
         plan = self._pad_plan(topo)
         if plan.is_identity:
             return state
         state = dict(state)
         state["opt"] = jax.tree.map(lambda x: x[:, : topo.C, : topo.M],
                                     state["opt"])
+        return state
+
+    def _restore_state(self, state, topo):
+        """Inverse of `_finalize_state` for resume: re-pad the opt axes
+        of a canonical (C, M) checkpoint to this mesh's (Cp, Mp) grid.
+        Zero-filled pad rows are exact — a padded user's opt state is
+        carried but never transmitted, and `_finalize_state` strips it
+        again, so the resumed trajectory is bitwise the checkpointing
+        mesh's (cross-mesh resume; CI gates it at --max-ulp 0)."""
+        plan = self._pad_plan(topo)
+        if plan.is_identity:
+            return state
+        state = dict(state)
+
+        def pad(x):   # [S, C, M, ...] -> [S, Cp, Mp, ...]
+            x = jnp.asarray(x)
+            width = [(0, 0), (0, plan.Cp - topo.C),
+                     (0, plan.Mp - topo.M)] + [(0, 0)] * (x.ndim - 3)
+            return jnp.pad(x, width)
+
+        state["opt"] = jax.tree.map(pad, state["opt"])
         return state
 
     def _build_round(self, sc, loss_fn, opt, topo, cfg, spec, X, Y, counter):

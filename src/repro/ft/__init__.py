@@ -1,0 +1,29 @@
+"""`repro.ft` — fault tolerance for the sweep engine.
+
+Three pieces, wired through ``repro.sim.sweep``:
+
+- `repro.ft.ckpt` — checkpoint/resume: the entire sweep carry saved
+  atomically at eval-window boundaries behind a versioned manifest
+  (``--checkpoint DIR --ckpt-every W --resume``); kill + resume is
+  bitwise identical to the uninterrupted run on both engines, both
+  drivers and across mesh shapes (CI gates it with
+  ``repro.obs.diff --max-ulp 0``).
+- `repro.ft.faults` — deterministic fault injection (crash at
+  round/window, transient IO errors on save, NaN/Inf-poisoned
+  gradients; ``--inject``), so the recovery paths above are exercised
+  in CI rather than trusted.
+- `repro.ft.guard` — in-program non-finite guard over post-OTA
+  estimates (``--guard halt|skip_round|zero_fill``); ``off`` is a
+  Python-level bitwise no-op like ``telemetry=``.
+"""
+from repro.ft.ckpt import CheckpointManager, check_manifest, git_sha
+from repro.ft.ckpt import SCHEMA_VERSION as CKPT_SCHEMA_VERSION
+from repro.ft.ckpt import scenario_fingerprint
+from repro.ft.faults import (CRASH_EXIT_CODE, FaultPlan, GradPoison,
+                             backoff_delay, hard_crash)
+from repro.ft.guard import GUARD_POLICIES, guard_estimate, validate_guard
+
+__all__ = ["CKPT_SCHEMA_VERSION", "CRASH_EXIT_CODE", "CheckpointManager",
+           "FaultPlan", "GUARD_POLICIES", "GradPoison", "backoff_delay",
+           "check_manifest", "git_sha", "guard_estimate", "hard_crash",
+           "scenario_fingerprint", "validate_guard"]

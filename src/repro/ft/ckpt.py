@@ -1,0 +1,185 @@
+"""Sweep checkpointing behind a versioned resume manifest.
+
+`CheckpointManager` wraps the atomic npz pytree store
+(`repro.checkpoint.store`) with everything a resumable sweep needs:
+
+- the **payload** is the entire sweep carry — the stacked per-seed
+  trainer state (params, optimizer moments, power accumulators, the
+  round index ``t`` that keys the counter PRNG and the ``[T]`` power
+  schedule, optional telemetry/guard blocks) plus the carried PRNG
+  keys — saved at eval-window boundaries as ``round_<cursor>.npz``;
+- the **manifest** (schema `repro.ft.ckpt/v1`, stored as the npz's
+  JSON metadata) records the scenario fingerprint, seed batch, round
+  cursor, git SHA, jax version, engine/mesh/driver metadata, and the
+  host-side eval accumulators (round indices + metric/telemetry
+  trajectories) — floats round-trip exactly through JSON, so a resumed
+  record is bitwise the uninterrupted one;
+- saves retry transient IO errors with exponential backoff whose
+  jitter comes from the counter PRNG (`repro.ft.faults.backoff_delay`
+  — deterministic recovery), and `repro.ft.faults.FaultPlan.
+  save_errors` injects exactly such errors in tests/CI.
+
+Resume validation (`check_manifest`): the scenario fingerprint, seed
+batch and total round count must match — the engine/mesh/driver may
+all differ (the repo's bitwise invariance theorems are what make a
+2x4-mesh checkpoint resumable on 1x1; `repro.obs.diff --max-ulp 0`
+gates it in CI).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import subprocess
+import time
+import warnings
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.checkpoint import store
+from repro.ft.faults import FaultPlan, backoff_delay
+
+SCHEMA_VERSION = "repro.ft.ckpt/v1"
+
+# checkpoint filenames: round_<cursor>.npz (cursor = rounds completed)
+PREFIX = "round_"
+
+
+def scenario_fingerprint(scenario_json: Dict) -> str:
+    """Content hash of a scenario's full JSON document — two configs
+    resume-compatible iff their fingerprints match."""
+    blob = json.dumps(scenario_json, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def git_sha() -> Optional[str]:
+    """Best-effort provenance (same contract as
+    `benchmarks.bench_check.run_provenance`)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() if out.returncode == 0 else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def check_manifest(man: Dict, fingerprint: str, seeds, rounds_total: int,
+                   jax_version: Optional[str] = None) -> None:
+    """Fail fast on a checkpoint that cannot produce a bitwise resume.
+
+    Hard errors: schema, scenario fingerprint, seed batch, total round
+    count.  A jax version change only *warns* — it may still be
+    bitwise, and `repro.obs.diff` is the actual gate."""
+    if man.get("schema") != SCHEMA_VERSION:
+        raise ValueError(f"checkpoint manifest schema "
+                         f"{man.get('schema')!r} != {SCHEMA_VERSION!r}")
+    if man.get("fingerprint") != fingerprint:
+        raise ValueError(
+            f"checkpoint is for a different scenario config "
+            f"(fingerprint {man.get('fingerprint')} != {fingerprint})")
+    if list(man.get("seeds", [])) != list(seeds):
+        raise ValueError(f"checkpoint seed batch {man.get('seeds')} != "
+                         f"requested {list(seeds)}")
+    if man.get("rounds_total") != rounds_total:
+        raise ValueError(
+            f"checkpoint was cut for {man.get('rounds_total')} total "
+            f"rounds, this run wants {rounds_total}")
+    if jax_version and man.get("jax_version") != jax_version:
+        warnings.warn(
+            f"resuming a checkpoint written under jax "
+            f"{man.get('jax_version')} with jax {jax_version}; bitwise "
+            f"parity is gated by repro.obs.diff, not guaranteed here")
+
+
+class CheckpointManager:
+    """Save/load the sweep carry for ONE scenario under `dirpath`.
+
+    emit: optional ``repro.obs.trace``-style callback
+    ``emit(event, **fields)`` journaling ``checkpoint`` saves and
+    ``fault`` retries; `faults` injects `save_errors` transient IO
+    failures; `sleep` is patchable for tests.
+    """
+
+    def __init__(self, dirpath: str, keep: int = 3, retries: int = 3,
+                 retry_base: float = 0.05, retry_seed: int = 0,
+                 faults: Optional[FaultPlan] = None,
+                 emit: Optional[Callable] = None,
+                 sleep: Callable = time.sleep):
+        self.dirpath = dirpath
+        self.keep = keep
+        self.retries = retries
+        self.retry_base = retry_base
+        self.retry_seed = retry_seed
+        self.emit = emit
+        self.sleep = sleep
+        self._inject_left = faults.save_errors if faults else 0
+        # wall-time accounting, surfaced in exec_info / BENCH records
+        self.saves = 0
+        self.io_retries = 0
+        self.save_seconds = 0.0
+        self.load_seconds = 0.0
+
+    def _emit(self, event: str, **fields) -> None:
+        if self.emit is not None:
+            self.emit(event, **fields)
+
+    def save(self, cursor: int, payload, manifest: Dict) -> str:
+        """Atomic save of (payload pytree, manifest) as
+        ``round_<cursor>.npz``, retrying transient IO errors."""
+        t0 = time.perf_counter()
+        attempt = 0
+        while True:
+            try:
+                if self._inject_left > 0:
+                    self._inject_left -= 1
+                    raise OSError("injected transient IO error "
+                                  "(FaultPlan.save_errors)")
+                path = store.save_step(
+                    self.dirpath, cursor, payload, keep=self.keep,
+                    prefix=PREFIX,
+                    meta={"schema": SCHEMA_VERSION, **manifest})
+                break
+            except OSError as e:
+                attempt += 1
+                if attempt > self.retries:
+                    raise
+                delay = backoff_delay(attempt - 1, self.retry_base,
+                                      self.retry_seed)
+                self.io_retries += 1
+                self._emit("fault", kind="ckpt_io_error", round=cursor,
+                           attempt=attempt, error=str(e),
+                           backoff_seconds=round(delay, 6))
+                self.sleep(delay)
+        dt = time.perf_counter() - t0
+        self.saves += 1
+        self.save_seconds += dt
+        self._emit("checkpoint", round=cursor, path=path,
+                   seconds=round(dt, 6), attempts=attempt + 1)
+        return path
+
+    def load_latest(self, template, check: Optional[Callable] = None
+                    ) -> Optional[Tuple[dict, Dict]]:
+        """``(payload, manifest)`` of the newest checkpoint, validated
+        against `template`'s structure/dtypes/shapes; None when the
+        directory holds no checkpoint (fresh start).
+
+        `check(manifest)` (optional) runs BEFORE the payload is
+        loaded, so semantic mismatches (wrong seed batch, wrong
+        scenario) surface as their own clear errors rather than as the
+        structural template mismatch they imply."""
+        path = store.latest(self.dirpath, prefix=PREFIX)
+        if path is None:
+            return None
+        t0 = time.perf_counter()
+        meta = store.read_meta(path)
+        manifest = meta.get("extra", {})
+        if manifest.get("schema") != SCHEMA_VERSION:
+            raise ValueError(
+                f"{path!r} is not a {SCHEMA_VERSION} checkpoint "
+                f"(schema {manifest.get('schema')!r})")
+        if check is not None:
+            check(manifest)
+        payload = store.load(path, template)
+        self.load_seconds += time.perf_counter() - t0
+        return payload, manifest

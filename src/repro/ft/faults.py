@@ -1,0 +1,139 @@
+"""Deterministic fault injection for the sweep engine.
+
+`FaultPlan` is a static description of what breaks, and when:
+
+- ``crash_round=k`` — hard-exit the process (`os._exit`, no cleanup —
+  the closest in-process stand-in for SIGKILL/preemption) after round
+  ``k`` has completed on the device.  The stepwise driver crashes at
+  exactly round ``k``; the chunked driver crashes at the first eval
+  window whose end reaches ``k`` (it cannot observe mid-window rounds
+  — that is the point of the driver).
+- ``crash_window=w`` — hard-exit after the ``w``-th eval window
+  (1-based) has been recorded.
+- ``save_errors=n`` — the first ``n`` checkpoint save attempts raise a
+  transient ``OSError``; `repro.ft.ckpt.CheckpointManager` retries
+  with exponential backoff whose jitter comes from the counter PRNG
+  (`repro.fed.clients.counter_uniform`), so recovery behavior is as
+  deterministic as the faults.
+- ``poison=MODE@T:C:M`` — user ``(C, M)``'s transmitted gradient flat
+  is poisoned with NaN (``mode="nan"``) or +Inf (``"inf"``) at global
+  round ``T``, exercising the non-finite guard (`repro.ft.guard`).
+
+Every fault fires at exactly the same (round, window, attempt) on both
+engines, both drivers and every mesh, so recovery paths can be gated
+bitwise in CI instead of trusted.  Crashes exit with `CRASH_EXIT_CODE`
+so test harnesses can tell an injected crash from a real failure.
+
+The CLI spec (``--inject`` on ``repro.sim.sweep``) is comma-separated
+``key=value`` pairs, e.g. ``crash_round=5,save_errors=2`` or
+``poison=nan@4:0:1``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+POISON_MODES = ("nan", "inf")
+
+# injected crashes exit with this code (distinguishable from real
+# failures and from SIGKILL's -9 in subprocess harnesses)
+CRASH_EXIT_CODE = 173
+
+
+@dataclass(frozen=True)
+class GradPoison:
+    """Poison user (c, m)'s transmitted flat delta at global round t."""
+    t: int
+    c: int
+    m: int
+    mode: str = "nan"
+
+    def __post_init__(self):
+        if self.mode not in POISON_MODES:
+            raise ValueError(f"unknown poison mode {self.mode!r}; "
+                             f"known: {', '.join(POISON_MODES)}")
+        if min(self.t, self.c, self.m) < 0:
+            raise ValueError(f"poison indices must be >= 0, got "
+                             f"t={self.t} c={self.c} m={self.m}")
+
+    @property
+    def value(self) -> np.float32:
+        return np.float32(np.nan if self.mode == "nan" else np.inf)
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    crash_round: Optional[int] = None
+    crash_window: Optional[int] = None
+    save_errors: int = 0
+    poison: Optional[GradPoison] = None
+
+    def __post_init__(self):
+        if self.save_errors < 0:
+            raise ValueError("save_errors must be >= 0")
+        for k in ("crash_round", "crash_window"):
+            v = getattr(self, k)
+            if v is not None and v < 1:
+                raise ValueError(f"{k} must be >= 1 (1-based), got {v}")
+
+    @property
+    def is_empty(self) -> bool:
+        return (self.crash_round is None and self.crash_window is None
+                and self.save_errors == 0 and self.poison is None)
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultPlan":
+        """Parse an ``--inject`` spec, e.g.
+        ``"crash_round=5,save_errors=2,poison=nan@4:0:1"``."""
+        kw: dict = {}
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "=" not in part:
+                raise ValueError(f"bad --inject entry {part!r} "
+                                 f"(expected key=value)")
+            k, v = part.split("=", 1)
+            k = k.strip()
+            if k in ("crash_round", "crash_window", "save_errors"):
+                kw[k] = int(v)
+            elif k == "poison":
+                if "@" not in v:
+                    raise ValueError(
+                        f"bad poison spec {v!r} (expected MODE@T:C:M)")
+                mode, at = v.split("@", 1)
+                idx = at.split(":")
+                if len(idx) != 3:
+                    raise ValueError(
+                        f"bad poison spec {v!r} (expected MODE@T:C:M)")
+                kw["poison"] = GradPoison(t=int(idx[0]), c=int(idx[1]),
+                                          m=int(idx[2]),
+                                          mode=mode.strip())
+            else:
+                raise ValueError(
+                    f"unknown --inject key {k!r}; known: crash_round, "
+                    f"crash_window, save_errors, poison")
+        return cls(**kw)
+
+
+def hard_crash(reason: str) -> None:
+    """Simulate a preemption: exit immediately, skipping every Python
+    cleanup (atexit, finally, buffered writes) — whatever survives is
+    whatever fsync already made durable."""
+    print(f"[repro.ft] injected crash: {reason}", file=sys.stderr)
+    sys.stderr.flush()
+    os._exit(CRASH_EXIT_CODE)
+
+
+def backoff_delay(attempt: int, base: float, seed: int = 0) -> float:
+    """Exponential backoff with deterministic jitter for save retries:
+    ``base * 2**attempt * (1 + u)`` where ``u ~ U[0, 1)`` comes from the
+    counter PRNG keyed on ``(seed, attempt)`` — the same threefry draws
+    on every engine/host, so retry timing is reproducible too."""
+    from repro.fed.clients import counter_uniform  # deferred: pulls jax
+    u = float(counter_uniform(seed, attempt, 1)[0])
+    return base * (2.0 ** attempt) * (1.0 + u)

@@ -1,0 +1,65 @@
+"""In-program non-finite guard over post-OTA aggregated estimates.
+
+Deep fades, byzantine transmit scales or injected faults
+(`repro.ft.faults.GradPoison`) can blow the matched-filter fold up to
+NaN/Inf; one poisoned estimate then contaminates every model it is
+applied to.  `guard_estimate` inspects each aggregated estimate right
+after the OTA hop and applies a policy:
+
+- ``"off"``      — the guard does not exist.  This is a PYTHON-level
+  gate in the round builders (the same discipline as ``telemetry=``):
+  the traced program is literally the pre-guard program, bitwise.
+- ``"zero_fill"`` — non-finite coordinates of the estimate are zeroed
+  (the model update skips exactly the contaminated symbols); finite
+  coordinates pass through untouched.
+- ``"skip_round"`` — any non-finite coordinate zeroes the WHOLE
+  estimate: the receiving model takes no update from that hop.
+- ``"halt"``      — in-program identical to ``"skip_round"`` (the
+  contaminated hop is skipped so the carried state stays finite); the
+  sweep driver additionally stops driving the scenario at the next
+  eval boundary and records the early stop.
+
+Selection is by ``jnp.where`` — on all-finite estimates every policy
+returns the input values unchanged (exact element selection, no
+arithmetic), so a guarded run without faults stays bitwise equal to an
+unguarded one.  The guard is fenced (`repro.core.aggregation.fence`)
+so XLA cannot fuse the finiteness checks into the surrounding fold and
+perturb it.  Each call also returns the number of guard trips
+(0/1 ``int32``), accumulated into ``state["guard_trips"]`` and
+journaled by the sweep driver as ``repro.obs.trace`` ``guard`` events.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import aggregation as agg
+
+GUARD_POLICIES = ("off", "halt", "skip_round", "zero_fill")
+
+
+def validate_guard(policy: str) -> None:
+    if policy not in GUARD_POLICIES:
+        raise ValueError(f"unknown guard policy {policy!r}; known: "
+                         f"{', '.join(GUARD_POLICIES)}")
+
+
+def guard_estimate(est, policy: str):
+    """Apply a non-finite guard policy to an aggregated estimate.
+
+    est: any float array (e.g. the ``[C, 2N]`` cluster estimates or the
+    ``[2N]`` PS estimate).  Returns ``(guarded_est, trip)`` where
+    ``trip`` is an ``int32`` scalar — 1 iff any coordinate was
+    non-finite.  Must not be called with ``policy="off"`` (the caller's
+    Python-level gate removes the guard entirely)."""
+    validate_guard(policy)
+    if policy == "off":
+        raise ValueError("guard_estimate with policy='off' — the "
+                         "caller must gate the guard out at build time")
+    est = agg.fence(est)
+    finite = jnp.isfinite(est)
+    trip = jnp.logical_not(jnp.all(finite))
+    if policy == "zero_fill":
+        out = jnp.where(finite, est, jnp.zeros_like(est))
+    else:  # halt / skip_round: drop the whole contaminated estimate
+        out = jnp.where(trip, jnp.zeros_like(est), est)
+    return agg.fence(out), trip.astype(jnp.int32)

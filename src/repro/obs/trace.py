@@ -21,6 +21,12 @@ trustworthy), plus event-specific fields:
 - ``telemetry`` — per-eval-window scalar summary of the in-program
   telemetry block (`repro.obs.telemetry.summarize`), emitted when the
   scenario ran with ``telemetry=True``.
+- ``checkpoint`` — one sweep-carry save (`repro.ft.ckpt`): round
+  cursor, path, wall seconds, attempts.
+- ``guard`` — the non-finite guard (`repro.ft.guard`) tripped:
+  scenario, round, cumulative trips, policy.
+- ``fault`` — an injected or recovered fault (`repro.ft.faults`):
+  checkpoint-save IO retries, imminent injected crashes.
 - ``scenario_end`` — totals: wall seconds, drive seconds, dispatches,
   traces, final mean accuracy.
 - ``run_end`` — always the last line (written by `TraceWriter.close`).
@@ -33,6 +39,11 @@ Usage (the sweep CLI wires ``--trace``):
 
 The second command validates a journal against the schema (exit 1 on
 any violation) and prints event counts — the CI trace-smoke gate.
+``--allow-truncated-tail`` tolerates exactly the damage a killed run
+leaves (a torn final line, a missing ``run_end``, an unclosed
+scenario) for post-crash audits; every line before the tail must still
+validate — each line is flushed AND fsynced before the writer returns,
+so everything `emit` completed survives a SIGKILL.
 """
 from __future__ import annotations
 
@@ -46,13 +57,15 @@ from typing import Dict, List, Optional, Sequence, Tuple
 SCHEMA_VERSION = "repro.obs.trace/v1"
 
 EVENTS = ("run_start", "scenario_start", "compile", "window",
-          "telemetry", "scenario_end", "run_end")
+          "telemetry", "checkpoint", "guard", "fault", "scenario_end",
+          "run_end")
 
 
 class TraceWriter:
-    """Append-only JSONL event writer (flushed per event, so a crashed
-    run still leaves a readable journal — it just misses ``run_end``,
-    which the validator reports)."""
+    """Append-only JSONL event writer (flushed + fsynced per event, so
+    even a SIGKILLed run leaves a valid, replayable journal up to its
+    last completed `emit` — it just misses ``run_end``, which the
+    validator reports unless told ``allow_truncated_tail``)."""
 
     def __init__(self, path: str):
         self.path = path
@@ -78,7 +91,11 @@ class TraceWriter:
         rec = {"event": event,
                "t": round(time.perf_counter() - self._t0, 6), **fields}
         self._f.write(json.dumps(rec) + "\n")
+        # crash consistency: the line must be durable before control
+        # returns — a later hard kill (SIGKILL / os._exit) must not be
+        # able to lose it, or the post-crash audit lies
         self._f.flush()
+        os.fsync(self._f.fileno())
 
     def close(self) -> None:
         if self._closed:
@@ -94,30 +111,42 @@ class TraceWriter:
         self.close()
 
 
-def validate_trace(path: str) -> Tuple[Dict[str, int], List[str]]:
+def validate_trace(path: str, allow_truncated_tail: bool = False
+                   ) -> Tuple[Dict[str, int], List[str]]:
     """Check a journal against the v1 schema.  Returns ``(event
-    counts, errors)``; an empty error list means the file is valid."""
+    counts, errors)``; an empty error list means the file is valid.
+
+    ``allow_truncated_tail`` tolerates the exact damage a killed run
+    leaves — an invalid FINAL line (torn mid-write), a missing
+    ``run_end``, and scenarios started but never ended.  Anything else
+    (torn interior lines, unknown events, a bad schema header) still
+    errors: per-line fsync guarantees the body is intact.
+    """
     errors: List[str] = []
     events: List[Dict] = []
+    lines: List[Tuple[int, str]] = []
     with open(path) as f:
         for i, line in enumerate(f, 1):
             line = line.strip()
-            if not line:
-                continue
-            try:
-                rec = json.loads(line)
-            except json.JSONDecodeError as e:
+            if line:
+                lines.append((i, line))
+    for n, (i, line) in enumerate(lines):
+        is_tail = n == len(lines) - 1
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            if not (allow_truncated_tail and is_tail):
                 errors.append(f"line {i}: not valid JSON ({e.msg})")
-                continue
-            if not isinstance(rec, dict):
-                errors.append(f"line {i}: not a JSON object")
-                continue
-            ev = rec.get("event")
-            if ev not in EVENTS:
-                errors.append(f"line {i}: unknown event {ev!r}")
-            if not isinstance(rec.get("t"), (int, float)):
-                errors.append(f"line {i}: missing/non-numeric 't'")
-            events.append(rec)
+            continue
+        if not isinstance(rec, dict):
+            errors.append(f"line {i}: not a JSON object")
+            continue
+        ev = rec.get("event")
+        if ev not in EVENTS:
+            errors.append(f"line {i}: unknown event {ev!r}")
+        if not isinstance(rec.get("t"), (int, float)):
+            errors.append(f"line {i}: missing/non-numeric 't'")
+        events.append(rec)
     if not events:
         errors.append("empty trace (no events)")
         return {}, errors
@@ -128,14 +157,15 @@ def validate_trace(path: str) -> Tuple[Dict[str, int], List[str]]:
     elif first.get("schema") != SCHEMA_VERSION:
         errors.append(f"schema {first.get('schema')!r} != "
                       f"{SCHEMA_VERSION!r}")
-    if events[-1].get("event") != "run_end":
+    if events[-1].get("event") != "run_end" and not allow_truncated_tail:
         errors.append(f"last event is {events[-1].get('event')!r}, "
                       f"expected 'run_end' (truncated run?)")
     starts = [e.get("scenario") for e in events
               if e.get("event") == "scenario_start"]
     ends = [e.get("scenario") for e in events
             if e.get("event") == "scenario_end"]
-    if sorted(map(str, starts)) != sorted(map(str, ends)):
+    if (sorted(map(str, starts)) != sorted(map(str, ends))
+            and not allow_truncated_tail):
         errors.append(f"unbalanced scenario_start/scenario_end: "
                       f"{starts} vs {ends}")
     for i, e in enumerate(events, 1):
@@ -155,8 +185,19 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         description="Validate a repro.obs.trace JSONL run journal")
     ap.add_argument("trace", help="journal file written via --trace")
+    ap.add_argument("--allow-truncated-tail", action="store_true",
+                    help="post-crash audit mode: tolerate a torn final "
+                         "line, a missing run_end and unclosed "
+                         "scenarios (exactly the damage a killed run "
+                         "leaves); everything else must still validate")
     args = ap.parse_args(argv)
-    counts, errors = validate_trace(args.trace)
+    counts, errors = validate_trace(
+        args.trace, allow_truncated_tail=args.allow_truncated_tail)
+    if args.allow_truncated_tail:
+        _, strict = validate_trace(args.trace)
+        for e in strict:
+            if e not in errors:
+                print(" ~ tolerated:", e)
     for ev in EVENTS:
         if counts.get(ev):
             print(f"  {ev:16s} {counts[ev]}")

@@ -53,6 +53,9 @@ from repro.core import aggregation as agg
 from repro.core.topology import power_schedule
 from repro.core.whfl import (eval_windows, init_round_state, make_chunk_fn,
                              make_round_fn)
+from repro.ft import ckpt as ft_ckpt
+from repro.ft.faults import FaultPlan, hard_crash
+from repro.ft.guard import GUARD_POLICIES, validate_guard
 from repro.nn.core import split_params
 from repro.obs.telemetry import TELEMETRY_KEYS, summarize
 from repro.optim import adam, sgd
@@ -74,6 +77,7 @@ def _silence_cpu_donation_warnings():
 
 SCHEMA_VERSION = "repro.sim.sweep/v1"
 BENCH_SCHEMA_VERSION = "repro.bench.sweep/v1"
+STATE_SCHEMA_VERSION = "repro.sim.state/v1"
 
 # Round drivers: how the host loop feeds rounds to the device.
 #   "stepwise" — one dispatch per round (+ key-split + eval dispatches),
@@ -135,6 +139,31 @@ class SweepResult:
         }
 
 
+class _FTContext:
+    """Per-scenario fault-tolerance driving context (repro.ft), handed
+    to the round drivers: where to resume from, when to checkpoint,
+    which faults to inject, and how to check the non-finite guard.
+    With every feature off (the default) the drivers consult only
+    cheap attribute reads — no device syncs, no saved state, no
+    behavior change."""
+
+    def __init__(self, guard_on: bool = False, guard_halt: bool = False,
+                 ckpt=None, ckpt_every: int = 1, start_round: int = 0,
+                 windows_done: int = 0, faults=None, save=None,
+                 check_guard=None):
+        self.guard_on = guard_on
+        self.guard_halt = guard_halt
+        self.ckpt = ckpt                   # CheckpointManager or None
+        self.ckpt_every = ckpt_every
+        self.start_round = start_round     # rounds already completed
+        self.windows_done = windows_done   # eval windows already done
+        self.faults = faults               # FaultPlan or None
+        self.save = save                   # save(state, keys, cursor)
+        self.check_guard = check_guard     # check_guard(state, round)
+        self.halted = False                # guard policy "halt" fired
+        self.trips = 0                     # cumulative guard trips
+
+
 class SweepRunner:
     """Run a list of scenarios over a shared seed batch.
 
@@ -157,7 +186,10 @@ class SweepRunner:
                  quick: bool = False, keep_state: bool = False,
                  batch: str = "vmap", driver: str = "stepwise",
                  warmup: bool = False, telemetry: bool = False,
-                 trace=None):
+                 trace=None, checkpoint: Optional[str] = None,
+                 ckpt_every: int = 1, resume: bool = False,
+                 guard: str = "off",
+                 faults: Optional[FaultPlan] = None):
         self.scenarios = [get_scenario(s) if isinstance(s, str) else s
                           for s in scenarios]
         if quick:
@@ -187,6 +219,23 @@ class SweepRunner:
         # (and BENCH_sweep rounds/sec) measure steady-state dispatch +
         # execution, not trace/compile time.
         self.warmup = warmup
+        # fault tolerance (repro.ft): checkpoint dir (per-scenario
+        # subdirs of saved sweep carries + resume manifests), save
+        # cadence in eval windows, resume-if-present, non-finite guard
+        # policy, and the deterministic fault-injection plan.  The
+        # defaults (None/off) are Python-level no-ops: not one op of
+        # the driven programs, and not one line of the driving loop's
+        # timing-relevant path, changes (pinned by tests/test_ft.py).
+        self.checkpoint = checkpoint
+        if ckpt_every < 1:
+            raise ValueError(f"ckpt_every must be >= 1, got {ckpt_every}")
+        self.ckpt_every = ckpt_every
+        if resume and checkpoint is None:
+            raise ValueError("resume=True needs a checkpoint directory")
+        self.resume = resume
+        validate_guard(guard)
+        self.guard = guard
+        self.faults = faults
 
     def _emit(self, event: str, **fields) -> None:
         """Journal one `repro.obs.trace` event (no-op without --trace)."""
@@ -209,12 +258,22 @@ class SweepRunner:
         (Cp, Mp) grid when the mesh does not divide (C, M)."""
         tele_C = topo.C if cfg.telemetry else None
         return [init_round_state(p, opt, topo.C, topo.M,
-                                 telemetry_C=tele_C) for p in params]
+                                 telemetry_C=tele_C,
+                                 guard=cfg.guard != "off")
+                for p in params]
 
     def _finalize_state(self, state, topo):
-        """The state view stored as ``final_state``.  Engine hook: the
-        sharded engine strips inactive-user padding here, so
-        cross-engine final states compare tree-equal."""
+        """The state view stored as ``final_state`` AND written into
+        checkpoints.  Engine hook: the sharded engine strips
+        inactive-user padding here, so cross-engine final states
+        compare tree-equal and checkpoints are mesh-portable."""
+        return state
+
+    def _restore_state(self, state, topo):
+        """Inverse of `_finalize_state` for ``--resume``: lift a
+        canonical checkpointed state back into this engine's layout.
+        Engine hook: the sharded engine re-pads the opt axes to its
+        mesh's (Cp, Mp) grid."""
         return state
 
     def _build_round(self, sc: Scenario, loss_fn, opt, topo, cfg, spec,
@@ -282,6 +341,13 @@ class SweepRunner:
         X, Y, xte, yte = sc.make_data()
         topo = sc.make_topology()
         cfg = sc.whfl_config()
+        # runner-level fault-tolerance knobs rewrite the round config:
+        # both are Python-level gates in the round builders, so the
+        # defaults leave the traced programs untouched
+        if self.guard != "off":
+            cfg = replace(cfg, guard=self.guard)
+        if self.faults is not None and self.faults.poison is not None:
+            cfg = replace(cfg, poison=self.faults.poison)
         opt = adam(sc.lr) if sc.opt == "adam" else sgd(sc.lr)
         self._emit("scenario_start", scenario=sc.name,
                    seeds=len(self.seeds), rounds=sc.rounds,
@@ -326,14 +392,110 @@ class SweepRunner:
             if tele is not None:
                 tele_acc.append(tele)
 
+        # -- fault tolerance: checkpoint manager, resume, guard hooks --
+        guard_on = cfg.guard != "off"
+        ckpt_mgr = None
+        if self.checkpoint is not None:
+            ckpt_mgr = ft_ckpt.CheckpointManager(
+                os.path.join(self.checkpoint, sc.name),
+                faults=self.faults,
+                emit=lambda ev, **f: self._emit(ev, scenario=sc.name,
+                                                **f))
+        fingerprint = ft_ckpt.scenario_fingerprint(sc.to_json())
+        start_round, windows_done = 0, 0
+        if self.resume and ckpt_mgr is not None:
+            # the checkpoint payload is the CANONICAL (pad-stripped)
+            # carry, so the validation template is the finalized view
+            # of a fresh state — mesh-portable by construction
+            template = {"state": self._finalize_state(state, topo),
+                        "keys": keys}
+
+            def _check(man):
+                ft_ckpt.check_manifest(man, fingerprint, self.seeds, T,
+                                       jax.__version__)
+                if man.get("guard", "off") != cfg.guard:
+                    raise ValueError(
+                        f"checkpoint was cut with guard="
+                        f"{man.get('guard')!r}, this run uses "
+                        f"{cfg.guard!r}")
+
+            loaded = ckpt_mgr.load_latest(template, check=_check)
+            if loaded is not None:
+                payload, man = loaded
+                state = self._restore_state(
+                    jax.tree.map(jnp.asarray, payload["state"]), topo)
+                keys = jnp.asarray(payload["keys"])
+                start_round = int(man["round"])
+                ev = man["eval"]
+                rounds.extend(int(r) for r in ev["rounds"])
+                for s in range(S):
+                    acc_t[s].extend(ev["metrics"]["acc"][s])
+                    loss_t[s].extend(ev["metrics"]["loss"][s])
+                    pe_t[s].extend(ev["metrics"]["edge_power"][s])
+                    pi_t[s].extend(ev["metrics"]["is_power"][s])
+                if ev.get("telemetry"):
+                    tele_acc.extend(
+                        {k: np.asarray(v) for k, v in t.items()}
+                        for t in ev["telemetry"])
+                windows_done = len(ev["rounds"])
+                self._emit("checkpoint", scenario=sc.name, resumed=True,
+                           round=start_round, windows=windows_done)
+
+        git_sha = ft_ckpt.git_sha() if ckpt_mgr is not None else None
+
+        def save_ckpt(state_now, keys_now, cursor):
+            manifest = {
+                "scenario": sc.name, "fingerprint": fingerprint,
+                "seeds": list(self.seeds), "round": int(cursor),
+                "rounds_total": int(T), "git_sha": git_sha,
+                "jax_version": jax.__version__,
+                "engine": {**self._exec_info(topo),
+                           "driver": self.driver},
+                "guard": cfg.guard, "telemetry": bool(cfg.telemetry),
+                "eval": {
+                    "rounds": [int(r) for r in rounds],
+                    "metrics": {"acc": [list(a) for a in acc_t],
+                                "loss": [list(v) for v in loss_t],
+                                "edge_power": [list(p) for p in pe_t],
+                                "is_power": [list(p) for p in pi_t]},
+                    # host accumulators ride the JSON manifest (floats
+                    # round-trip exactly), the device carry the npz
+                    "telemetry": ([{k: np.asarray(t[k]).tolist()
+                                    for k in t} for t in tele_acc]
+                                  if cfg.telemetry else None),
+                },
+            }
+            ckpt_mgr.save(
+                int(cursor),
+                {"state": self._finalize_state(state_now, topo),
+                 "keys": keys_now}, manifest)
+
+        ft = _FTContext(guard_on=guard_on,
+                        guard_halt=cfg.guard == "halt", ckpt=ckpt_mgr,
+                        ckpt_every=self.ckpt_every,
+                        start_round=start_round,
+                        windows_done=windows_done, faults=self.faults,
+                        save=save_ckpt)
+
+        def check_guard(state_now, round_idx):
+            total = int(np.sum(np.asarray(state_now["guard_trips"])))
+            if total > ft.trips:
+                ft.trips = total
+                self._emit("guard", scenario=sc.name, round=round_idx,
+                           trips=total, policy=cfg.guard)
+            if ft.guard_halt and total > 0:
+                ft.halted = True
+
+        ft.check_guard = check_guard
+
         if self.driver == "chunked":
             state, dispatches, drive_s = self._drive_chunked(
                 sc, loss_fn, opt, topo, cfg, spec, X, Y, counter, _eval,
-                state, keys, T, rounds, record)
+                state, keys, T, rounds, record, ft)
         else:
             state, dispatches, drive_s = self._drive_stepwise(
                 sc, loss_fn, opt, topo, cfg, spec, X, Y, counter, _eval,
-                state, keys, T, rounds, record)
+                state, keys, T, rounds, record, ft)
 
         # field-major [S][n_evals] trajectories; per-eval leaves are
         # scalars or [C] lists, same layout as the metrics block
@@ -350,6 +512,18 @@ class SweepRunner:
         exec_info = {**self._exec_info(topo), "driver": self.driver,
                      "dispatches": dispatches, "drive_seconds": drive_s,
                      "warmup": self.warmup}
+        if guard_on:
+            ft.check_guard(state, rounds[-1] if rounds else start_round)
+            exec_info.update(guard=cfg.guard, guard_trips=ft.trips,
+                             guard_halted=ft.halted)
+        if ckpt_mgr is not None:
+            exec_info.update(
+                ckpt_saves=ckpt_mgr.saves,
+                ckpt_io_retries=ckpt_mgr.io_retries,
+                ckpt_save_seconds=round(ckpt_mgr.save_seconds, 6),
+                ckpt_load_seconds=round(ckpt_mgr.load_seconds, 6),
+                ckpt_every=self.ckpt_every,
+                resumed_from=start_round if self.resume else None)
         seconds = time.perf_counter() - t0
         self._emit("scenario_end", scenario=sc.name, seconds=seconds,
                    drive_seconds=drive_s, dispatches=dispatches,
@@ -366,7 +540,8 @@ class SweepRunner:
     # -- the stepwise driver: one dispatch per round ------------------------
 
     def _drive_stepwise(self, sc, loss_fn, opt, topo, cfg, spec, X, Y,
-                        counter, _eval, state, keys, T, rounds, record):
+                        counter, _eval, state, keys, T, rounds, record,
+                        ft):
         round_b = self._build_round(sc, loss_fn, opt, topo, cfg, spec, X, Y,
                                     counter)
         split_b = jax.jit(jax.vmap(jax.random.split))
@@ -390,7 +565,8 @@ class SweepRunner:
         seen = [counter[0]]
         t_drive = time.perf_counter()
         win_t0, win_rounds = t_drive, 0
-        for t in range(T):
+        windows_done = ft.windows_done
+        for t in range(ft.start_round, T):
             P_t, P_is_t = power_schedule(
                 t, cfg.power_base, cfg.power_slope, cfg.power_is_factor,
                 cfg.power_low)
@@ -417,18 +593,48 @@ class SweepRunner:
                            rounds=win_rounds,
                            seconds=round(now - win_t0, 6))
                 win_t0, win_rounds = now, 0
+                windows_done += 1
+                if ft.guard_on:
+                    ft.check_guard(state, t + 1)
+                due = (ft.ckpt is not None
+                       and (windows_done % ft.ckpt_every == 0
+                            or t == T - 1 or ft.halted))
+                if due:
+                    ft.save(state, keys, t + 1)
+                if ft.halted:
+                    break
+                if (ft.faults is not None
+                        and ft.faults.crash_window == windows_done):
+                    self._emit("fault", scenario=sc.name,
+                               kind="crash_window", window=windows_done)
+                    hard_crash(f"injected crash after window "
+                               f"{windows_done} ({sc.name})")
+            # crash_round fires AFTER any boundary checkpoint at t+1,
+            # so a resume from that checkpoint replays nothing
+            if (ft.faults is not None
+                    and ft.faults.crash_round == t + 1):
+                self._emit("fault", scenario=sc.name,
+                           kind="crash_round", round=t + 1)
+                hard_crash(f"injected crash after round {t + 1} "
+                           f"({sc.name})")
         jax.block_until_ready(state)
         return state, dispatches, time.perf_counter() - t_drive
 
     # -- the chunked driver: one dispatch per eval window -------------------
 
     def _drive_chunked(self, sc, loss_fn, opt, topo, cfg, spec, X, Y,
-                       counter, _eval, state, keys, T, rounds, record):
+                       counter, _eval, state, keys, T, rounds, record,
+                       ft):
         """Device-resident multi-round driving: `lax.scan` over each
         eval window (`repro.core.whfl.make_chunk_fn`), a precomputed
         [T] power schedule, donated carry buffers, and asynchronous
         metric fetch — every window is enqueued without a host sync,
-        and ONE `device_get` at the end transfers all metrics."""
+        and ONE `device_get` at the end transfers all metrics.
+
+        Fault tolerance forces a drain of the pending metric fetches
+        at each boundary that needs host state (a due checkpoint, a
+        guard-halt check, an injected crash) — off-path, the program
+        and its one-sync-per-scenario schedule are untouched."""
         tele_on = cfg.telemetry   # Python-level: off-path programs are
                                   # byte-identical to pre-telemetry ones
 
@@ -452,6 +658,16 @@ class SweepRunner:
         P_is_all = P_is_all.astype(np.float32)
 
         windows = eval_windows(T, sc.eval_every)
+        # checkpoints are cut at window boundaries, so a resume cursor
+        # must land exactly on a prefix of the window schedule
+        skip, done = 0, 0
+        while done < ft.start_round and skip < len(windows):
+            done += windows[skip]
+            skip += 1
+        if done != ft.start_round:
+            raise ValueError(
+                f"resume round {ft.start_round} is not an eval-window "
+                f"boundary of T={T}, eval_every={sc.eval_every}")
         with _silence_cpu_donation_warnings():
             if self.warmup:  # compile + run each distinct window once
                 for w in sorted(set(windows)):
@@ -461,8 +677,16 @@ class SweepRunner:
 
             seen = [counter[0]]
             t_drive = time.perf_counter()
-            pending, off = [], 0
-            for w in windows:
+            pending, off = [], ft.start_round
+            windows_done, driven = skip, 0
+
+            def drain():
+                nonlocal pending
+                for metrics in jax.device_get(pending):
+                    record(*metrics)
+                pending = []
+
+            for w in windows[skip:]:
                 w_t0 = time.perf_counter()
                 state, keys, metrics = chunk_b(state, keys,
                                                P_all[off:off + w],
@@ -470,6 +694,8 @@ class SweepRunner:
                 off += w
                 rounds.append(off)
                 pending.append(metrics)
+                driven += 1
+                windows_done += 1
                 self._note_traces(counter, seen)
                 # enqueue latency only: this driver is async by design
                 # (one device sync per scenario), so execution time is
@@ -477,11 +703,34 @@ class SweepRunner:
                 self._emit("window", scenario=sc.name, round=off,
                            rounds=w, enqueue_only=True,
                            seconds=round(time.perf_counter() - w_t0, 6))
+                due_ckpt = (ft.ckpt is not None
+                            and (windows_done % ft.ckpt_every == 0
+                                 or off == T))
+                crash_due = (ft.faults is not None
+                             and (ft.faults.crash_window == windows_done
+                                  or (ft.faults.crash_round is not None
+                                      and off >= ft.faults.crash_round)))
+                if ft.guard_halt or due_ckpt or crash_due:
+                    drain()   # manifests and guard reads need host state
+                    if ft.guard_on:
+                        ft.check_guard(state, off)
+                    if due_ckpt or (ft.halted and ft.ckpt is not None):
+                        ft.save(state, keys, off)
+                    if ft.halted:
+                        break
+                    if crash_due:
+                        kind = ("crash_window"
+                                if ft.faults.crash_window == windows_done
+                                else "crash_round")
+                        self._emit("fault", scenario=sc.name, kind=kind,
+                                   window=windows_done, round=off)
+                        hard_crash(f"injected crash after window "
+                                   f"{windows_done} / round {off} "
+                                   f"({sc.name})")
             # one sync: block on the last chunk, then transfer every
             # window's metrics (all already resident on device)
-            for metrics in jax.device_get(pending):
-                record(*metrics)
-        return state, len(windows), time.perf_counter() - t_drive
+            drain()
+        return state, driven, time.perf_counter() - t_drive
 
     # -- the sweep -----------------------------------------------------------
 
@@ -527,6 +776,27 @@ def bench_doc(results: Sequence[SweepResult]) -> Dict:
             "jax_backend": jax.default_backend(),
             "device_count": jax.device_count(),
             "records": records}
+
+
+def state_doc(results: Sequence[SweepResult]) -> Dict:
+    """``--state-out``: the full final carry of every scenario as JSON
+    (`STATE_SCHEMA_VERSION`), leaf-keyed by `jax.tree_util.keystr` with
+    exact float round-trips — diffable with ``repro.obs.diff
+    --max-ulp 0``, which is how CI gates kill+resume runs bitwise
+    against an uninterrupted reference."""
+    scenarios = []
+    for r in results:
+        if r.final_state is None:
+            raise ValueError(
+                f"no final state for {r.scenario.name!r}: state_doc "
+                f"needs keep_state=True")
+        leaves, _ = jax.tree_util.tree_flatten_with_path(r.final_state)
+        scenarios.append({
+            "scenario": r.scenario.name,
+            "state": {jax.tree_util.keystr(path):
+                      np.asarray(v).tolist() for path, v in leaves},
+        })
+    return {"schema": STATE_SCHEMA_VERSION, "scenarios": scenarios}
 
 
 def csv_lines(doc: Dict, prefix: str = "sweep") -> List[str]:
@@ -603,7 +873,42 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
     ap.add_argument("--profile", default=None, metavar="DIR",
                     help="wrap the sweep in jax.profiler.trace(DIR) "
                          "(view with TensorBoard / xprof)")
+    ap.add_argument("--checkpoint", default=None, metavar="DIR",
+                    help="checkpoint the full sweep carry (stacked "
+                         "trainer states, opt state, PRNG keys, metric "
+                         "accumulators) into per-scenario subdirs of DIR "
+                         "at eval-window boundaries (repro.ft.ckpt/v1 "
+                         "manifest + atomic npz); off (the default) is a "
+                         "Python-level no-op")
+    ap.add_argument("--ckpt-every", type=int, default=1, metavar="W",
+                    help="checkpoint cadence in eval windows (default 1; "
+                         "the final window is always saved)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint under "
+                         "--checkpoint if one exists (fresh start "
+                         "otherwise); the resumed trajectory is bitwise "
+                         "identical to the uninterrupted run")
+    ap.add_argument("--guard", default="off",
+                    choices=list(GUARD_POLICIES),
+                    help="non-finite guard on post-OTA aggregated "
+                         "estimates: off (default; bitwise no-op) | halt "
+                         "(zero the estimate, stop the scenario at the "
+                         "next eval boundary) | skip_round (drop the "
+                         "poisoned update, keep going) | zero_fill "
+                         "(zero only the non-finite entries)")
+    ap.add_argument("--inject", default=None, metavar="SPEC",
+                    help="deterministic fault injection "
+                         "(repro.ft.faults.FaultPlan), e.g. "
+                         "'crash_round=5', 'crash_window=2', "
+                         "'save_errors=2', 'poison=nan@4:0:1' "
+                         "(MODE@round:cluster:user), comma-combinable; "
+                         "injected crashes exit with status 173")
     ap.add_argument("--out", default=None, help="write JSON document here")
+    ap.add_argument("--state-out", default=None, metavar="PATH",
+                    help="write the full final carry of every scenario "
+                         "as JSON (repro.sim.state/v1; implies keeping "
+                         "final states) — diffable bitwise with "
+                         "repro.obs.diff --max-ulp 0")
     ap.add_argument("--bench-out", default=None,
                     help="write the BENCH_sweep.json throughput document "
                          "(rounds/sec per scenario) here")
@@ -621,6 +926,15 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
 
     seeds = ([int(s) for s in args.seed_list.split(",")]
              if args.seed_list else args.seeds)
+    faults = None
+    if args.inject:
+        try:
+            faults = FaultPlan.parse(args.inject)
+        except ValueError as e:
+            ap.error(str(e))
+    if args.checkpoint and len(args.driver.split(",")) > 1:
+        ap.error("--checkpoint needs a single --driver (the round "
+                 "cursor keys one driving schedule)")
     tracer = None
     if args.trace:
         from repro.obs.trace import TraceWriter   # lazy: obs layer
@@ -640,7 +954,12 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
                                      driver=driver.strip(),
                                      warmup=args.warmup,
                                      telemetry=args.telemetry,
-                                     trace=tracer)
+                                     trace=tracer,
+                                     keep_state=bool(args.state_out),
+                                     checkpoint=args.checkpoint,
+                                     ckpt_every=args.ckpt_every,
+                                     resume=args.resume,
+                                     guard=args.guard, faults=faults)
             except (KeyError, ValueError) as e:
                 ap.error(str(e.args[0] if e.args else e))
             results.extend(runner.run())
@@ -655,6 +974,12 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
         with open(args.out, "w") as f:
             json.dump(doc, f, indent=1)
         print("wrote", args.out)
+    if args.state_out:
+        os.makedirs(os.path.dirname(args.state_out) or ".",
+                    exist_ok=True)
+        with open(args.state_out, "w") as f:
+            json.dump(state_doc(results), f, indent=1)
+        print("wrote", args.state_out)
     if args.bench_out:
         os.makedirs(os.path.dirname(args.bench_out) or ".", exist_ok=True)
         with open(args.bench_out, "w") as f:

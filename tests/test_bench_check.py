@@ -240,6 +240,24 @@ def test_append_records_failing_runs_and_still_fails(write, tmp_path):
     assert len(doc["runs"]) == 1 and doc["runs"][0]["passed"] is False
 
 
+def test_append_records_checkpoint_overhead(write, tmp_path):
+    # a run that checkpointed (PR 8) carries its save/load wall-time
+    # into the trajectory; plain records keep the historical shape
+    # (no "ckpt" key at all)
+    traj = str(tmp_path / "traj.json")
+    ck = rec(rps=10.0)
+    ck["exec"].update(ckpt_saves=6, ckpt_save_seconds=0.123,
+                      ckpt_load_seconds=0.0)
+    f = write("f.json", sweep_doc([ck, rec("sc2", rps=10.0)]))
+    b = write("b.json", baseline_doc([rec(rps=10.0),
+                                      rec("sc2", rps=10.0)]))
+    assert bench_check.main([f, "--baseline", b, "--append", traj]) == 0
+    r0, r1 = json.loads(open(traj).read())["runs"][0]["records"]
+    assert r0["ckpt"] == {"saves": 6, "save_seconds": 0.123,
+                          "load_seconds": 0.0}
+    assert "ckpt" not in r1
+
+
 def test_append_refuses_non_trajectory_target(write, tmp_path):
     # pointing --append at a sweep/baseline doc must not clobber it
     f = write("f.json", sweep_doc([rec(rps=10.0)]))
