@@ -16,7 +16,13 @@ excluded and the numbers are comparable across runs):
 - **dispatch ratio** (``--expect-dispatch-ratio NAME:RATIO``): the
   stepwise record must issue at least RATIO times more host dispatches
   than the chunked record — the driver's structural win, independent
-  of hardware.
+  of hardware;
+- **memory ratio** (``--expect-memory-ratio NAME:RATIO``): scenario
+  NAME's recorded per-device peak symbol-block bytes must fall at
+  least RATIO times going from the ``gathered`` to the ``u_sharded``
+  fused combine — the partial combine's structural win, independent
+  of hardware.  Every run also prints the scale_u* family's
+  rounds/sec-per-user trend.
 
 Gate calibration (measured on the 2-core CPU reference box, warm):
 XLA:CPU dispatch costs ~0.07 ms against ~40 ms rounds, so eliminating
@@ -47,8 +53,9 @@ import argparse
 import datetime
 import json
 import os
+import re
 import sys
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 BASELINE_SCHEMA = "repro.bench.baseline/v1"
 # v2 entries carry run provenance (git SHA, jax version, device count,
@@ -61,9 +68,81 @@ TRAJECTORY_READ_SCHEMAS = ("repro.bench.trajectory/v1", TRAJECTORY_SCHEMA)
 
 def _key(rec: Dict) -> Tuple:
     ex = rec.get("exec", {})
+    # `combine` distinguishes the u_sharded fused cluster-hop records;
+    # `gathered` IS the legacy behavior, so it normalizes to None and
+    # keeps matching pre-combine baseline records (a fresh gathered
+    # record must not silently un-gate itself against an old baseline)
+    combine = ex.get("combine")
+    if combine == "gathered":
+        combine = None
     return (rec["scenario"], ex.get("name"),
             rec.get("driver", ex.get("driver", "stepwise")),
-            ex.get("mesh"))
+            ex.get("mesh"), combine)
+
+
+_SCALE_RE = re.compile(r"^scale_u(\d+)")
+
+
+def _users(scenario: str) -> Optional[int]:
+    m = _SCALE_RE.match(scenario)
+    return int(m.group(1)) if m else None
+
+
+def print_scale_trend(fresh: List[Dict]) -> None:
+    """The scaling story in one table: rounds/sec-per-user across the
+    scale_u* family.  Flat (or rising) per-user throughput as U grows
+    is what the u_sharded combine buys; the trend is printed for every
+    run and captured in the BENCH/trajectory records."""
+    rows = [(u, rec) for rec in fresh
+            if (u := _users(rec["scenario"])) is not None]
+    if not rows:
+        return
+    print("scale trend (rounds/sec per user):")
+    for u, rec in sorted(rows, key=lambda t: (t[0], str(_key(t[1])))):
+        rps = rec["rounds_per_sec"]
+        ex = rec.get("exec", {})
+        mem = ex.get("peak_symbol_bytes")
+        mem_s = f", peak symbol bytes {mem:,}" if mem else ""
+        print(f"  {_key(rec)}: U={u} {rps:.3f} rounds/s -> "
+              f"{rps / u:.3e} rounds/s/user{mem_s}")
+
+
+def check_memory_ratio(fresh: List[Dict], scenario: str,
+                       ratio: float) -> List[str]:
+    """The u_sharded memory win, asserted instead of narrated: the
+    scenario's recorded per-device peak symbol-block bytes must fall by
+    >= `ratio` going gathered -> u_sharded."""
+    by_combine: Dict[str, List[Dict]] = {}
+    for rec in fresh:
+        if rec["scenario"] == scenario:
+            cmb = rec.get("exec", {}).get("combine")
+            if cmb is not None:
+                by_combine.setdefault(cmb, []).append(rec)
+    missing = [c for c in ("gathered", "u_sharded")
+               if c not in by_combine]
+    if missing:
+        return [f"memory gate for {scenario!r} needs both a gathered "
+                f"and a u_sharded record; have {sorted(by_combine)}"]
+    dupes = {c: [_key(r) for r in rs] for c, rs in by_combine.items()
+             if len(rs) > 1}
+    if dupes:
+        return [f"memory gate for {scenario!r} is ambiguous — multiple "
+                f"records per combine: {dupes}"]
+    gb = by_combine["gathered"][0]["exec"].get("peak_symbol_bytes")
+    ub = by_combine["u_sharded"][0]["exec"].get("peak_symbol_bytes")
+    if not gb or not ub:  # missing/None/0 is unmeasured, never a pass
+        return [f"{scenario}: peak_symbol_bytes missing from the "
+                f"records (gathered={gb!r}, u_sharded={ub!r}); cannot "
+                f"gate the memory reduction"]
+    got = gb / ub
+    status = "ok" if got >= ratio else "FAIL"
+    print(f"  [{status}] {scenario}: {gb:,} gathered vs {ub:,} "
+          f"u_sharded peak symbol bytes -> {got:.2f}x reduction "
+          f"(need >= {ratio}x)")
+    if got < ratio:
+        return [f"{scenario}: peak symbol-byte reduction {got:.2f}x "
+                f"< required {ratio}x"]
+    return []
 
 
 def _records(doc: Dict) -> List[Dict]:
@@ -207,6 +286,12 @@ def _trajectory_record(r: Dict) -> Dict:
            "mesh": ex.get("mesh"),
            "rounds_per_sec": r.get("rounds_per_sec"),
            "dispatches": r.get("dispatches")}
+    if ex.get("combine") is not None:
+        rec["combine"] = ex["combine"]
+        rec["peak_symbol_bytes"] = ex.get("peak_symbol_bytes")
+    u = _users(r["scenario"])
+    if u and r.get("rounds_per_sec"):
+        rec["rounds_per_sec_per_user"] = r["rounds_per_sec"] / u
     if ex.get("ckpt_saves") is not None:
         rec["ckpt"] = {"saves": ex.get("ckpt_saves"),
                        "save_seconds": ex.get("ckpt_save_seconds"),
@@ -271,6 +356,12 @@ def main(argv=None) -> int:
                     help="require the stepwise record of SCENARIO to "
                          "issue >= RATIO x the chunked record's host "
                          "dispatches (repeatable)")
+    ap.add_argument("--expect-memory-ratio", action="append", default=[],
+                    metavar="SCENARIO:RATIO",
+                    help="require SCENARIO's recorded per-device peak "
+                         "symbol bytes to fall >= RATIO x going from "
+                         "the gathered to the u_sharded combine "
+                         "(repeatable)")
     ap.add_argument("--append", metavar="PATH", default=None,
                     help="append the fresh rounds/sec records to the "
                          "time-series document at PATH (created when "
@@ -312,6 +403,11 @@ def main(argv=None) -> int:
         name, ratio = parse_spec(spec)
         print(f"dispatch gate ({spec}):")
         errors += check_dispatch_ratio(fresh, name, ratio)
+    for spec in args.expect_memory_ratio:
+        name, ratio = parse_spec(spec)
+        print(f"memory gate ({spec}):")
+        errors += check_memory_ratio(fresh, name, ratio)
+    print_scale_trend(fresh)
 
     if args.append:
         stamp = datetime.datetime.now(datetime.timezone.utc).isoformat(

@@ -99,11 +99,27 @@ def load(path: str, like):
     return jax.tree.unflatten(treedef, leaves)
 
 
+def _step_candidates(dirpath: str, prefix: str) -> list[str]:
+    """`<prefix><int>.npz` files in `dirpath`.  Non-numeric stems that
+    share the prefix (a hand-copied ``ckpt_best.npz``, a foreign
+    prefix like ``ckpt_best_7.npz``) are NOT step checkpoints: they are
+    skipped here instead of crashing the numeric sort — and, in
+    `save_step`, never pruned."""
+    out = []
+    for f in os.listdir(dirpath):
+        if not (f.startswith(prefix) and f.endswith(".npz")):
+            continue
+        stem = f[len(prefix):-4]
+        if stem.isdigit() or (stem.startswith("-") and
+                              stem[1:].isdigit()):
+            out.append(f)
+    return out
+
+
 def latest(dirpath: str, prefix: str = "ckpt_") -> str | None:
     if not os.path.isdir(dirpath):
         return None
-    cands = [f for f in os.listdir(dirpath)
-             if f.startswith(prefix) and f.endswith(".npz")]
+    cands = _step_candidates(dirpath, prefix)
     if not cands:
         return None
     return os.path.join(
@@ -113,11 +129,15 @@ def latest(dirpath: str, prefix: str = "ckpt_") -> str | None:
 def save_step(dirpath: str, step: int, tree, keep: int = 3,
               prefix: str = "ckpt_", meta: Optional[Dict] = None) -> str:
     """Save `<prefix><step>.npz` and prune old checkpoints with the
-    same prefix (numeric step order, keeping the newest `keep`)."""
+    same prefix (numeric step order, keeping the newest `keep`).
+    ``keep`` must be >= 1: retention is the function's contract, and
+    ``keep=0`` would silently keep everything (``cands[:-0]`` is the
+    whole list) while reading as "keep none"."""
+    if keep < 1:
+        raise ValueError(f"save_step needs keep >= 1, got {keep}")
     path = os.path.join(dirpath, f"{prefix}{step}.npz")
     save(path, tree, meta=meta)
-    cands = sorted([f for f in os.listdir(dirpath)
-                    if f.startswith(prefix) and f.endswith(".npz")],
+    cands = sorted(_step_candidates(dirpath, prefix),
                    key=lambda f: int(f[len(prefix):-4]))
     for f in cands[:-keep]:
         os.unlink(os.path.join(dirpath, f))

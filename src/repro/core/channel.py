@@ -429,15 +429,21 @@ class FusedBackend(ChannelBackend):
     name = "fused"
 
     def cluster(self, key, deltas, topo, P_t, cfg):
-        from repro.kernels import fused_combine
+        from repro.kernels import canonical_block_u, fused_combine
 
         C, M, twoN = deltas.shape
         N = twoN // 2
         U, K = C * M, topo.K
         tx = pack_cx(deltas).reshape(U, N)
         amp, own, bb = _cluster_geometry(topo, cfg)
+        # the canonical u-blocking every fused cluster-hop path shares
+        # (single engine, sharded gathered, sharded u-sharded partial
+        # fold): per-user accumulation order is part of the bitwise
+        # cross-engine contract, so it must be a pure function of the
+        # workload shape
         y = fused_combine(_seed_words(key), P_t * tx, amp, own, K=K,
-                          sigma_h2=topo.sigma_h2, sigma_z2=topo.sigma_z2)
+                          sigma_h2=topo.sigma_h2, sigma_z2=topo.sigma_z2,
+                          block_u=canonical_block_u(M))
         est = y / K / (P_t * topo.sigma_h2 * bb[:, None])
         return unpack_cx(est)
 

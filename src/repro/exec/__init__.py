@@ -27,7 +27,8 @@ from typing import Sequence, Union
 from repro.exec.mesh import (MESH_AXES, host_device_recipe,
                              make_device_mesh, pad_plan_for, parse_mesh,
                              validate_mesh_for)
-from repro.exec.round import make_sharded_chunk_fn, make_sharded_round_fn
+from repro.exec.round import (COMBINES, make_sharded_chunk_fn,
+                              make_sharded_round_fn)
 from repro.exec.runner import ShardedSweepRunner
 from repro.sim.scenario import Scenario
 from repro.sim.sweep import DRIVERS, SweepRunner
@@ -42,9 +43,14 @@ def make_runner(exec_name: str, scenarios: Sequence[Union[str, Scenario]],
                 warmup: bool = False, telemetry: bool = False,
                 trace=None, checkpoint=None, ckpt_every: int = 1,
                 resume: bool = False, guard: str = "off",
-                faults=None) -> SweepRunner:
+                faults=None, combine: str = "gathered") -> SweepRunner:
     """Engine factory behind the ``--exec`` CLI flag."""
     if exec_name == "single":
+        if combine != "gathered":
+            raise ValueError(
+                f"combine={combine!r} requires the sharded engine "
+                f"(--exec sharded); the single engine has no user-axis "
+                f"distribution to select")
         return SweepRunner(scenarios, seeds=seeds, quick=quick,
                            keep_state=keep_state, batch=batch,
                            driver=driver, warmup=warmup,
@@ -58,13 +64,14 @@ def make_runner(exec_name: str, scenarios: Sequence[Union[str, Scenario]],
                                   telemetry=telemetry, trace=trace,
                                   checkpoint=checkpoint,
                                   ckpt_every=ckpt_every, resume=resume,
-                                  guard=guard, faults=faults)
+                                  guard=guard, faults=faults,
+                                  combine=combine)
     raise ValueError(
         f"unknown execution engine {exec_name!r}; known: "
         f"{', '.join(ENGINES)}")
 
 
-__all__ = ["DRIVERS", "ENGINES", "MESH_AXES", "ShardedSweepRunner",
+__all__ = ["COMBINES", "DRIVERS", "ENGINES", "MESH_AXES", "ShardedSweepRunner",
            "SweepRunner", "host_device_recipe", "make_device_mesh",
            "make_runner", "make_sharded_chunk_fn", "make_sharded_round_fn",
            "pad_plan_for", "parse_mesh", "validate_mesh_for"]

@@ -77,14 +77,20 @@ from repro.kernels import fused_mac
 from repro.obs.telemetry import (cluster_telemetry, edge_telemetry_init,
                                  is_telemetry, is_telemetry_zero)
 # the executor's symbol padding must agree with the kernel's rounding
-from repro.kernels.fused_mac import _round_up
+from repro.kernels.fused_mac import (_round_up, canonical_block_u,
+                                     fused_mac_partials, fused_noise,
+                                     fused_partials_reduce)
 from repro.optim import Optimizer, apply_updates
 from repro.sharding import shard_map
 
 
+COMBINES = ("gathered", "u_sharded")
+
+
 def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
                        cfg: WHFLConfig, spec: agg.FlatSpec, X, Y, mesh,
-                       trace_counter: Optional[list] = None):
+                       trace_counter: Optional[list] = None,
+                       combine: str = "gathered"):
     """Construct the per-shard round body shared by both sharded entry
     points: `make_sharded_round_fn` (one shard_map per round) and
     `make_sharded_chunk_fn` (a lax.scan of the same body *inside* one
@@ -99,7 +105,20 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
     compute on the real ``[:C, :M]`` block only — see module docstring.
     Callers building states directly must size the opt axes to
     ``(plan.Cp, plan.Mp)`` (the sweep runners do this automatically).
+
+    ``combine`` selects the fused cluster hop's distribution strategy:
+    ``"gathered"`` (default) all-gathers the `[U, N_loc]` symbol block
+    and runs the full-U kernel per shard; ``"u_sharded"`` keeps each
+    cluster-axis shard's own user tile, runs the partial-combine
+    kernel there and folds the per-tile accumulators in pinned global
+    u-block order (`repro.kernels.fused_mac.fused_partials_reduce`),
+    so no device ever materializes the full symbol block.  Both are
+    bitwise equal to each other, to every mesh shape and to the single
+    engine; for non-fused scenarios the flag is a Python-level no-op.
     """
+    if combine not in COMBINES:
+        raise ValueError(f"unknown combine {combine!r}; known: "
+                         f"{', '.join(COMBINES)}")
     C, M = topo.C, topo.M
     plan = pad_plan_for(mesh, C, M)
     Cp, Mp = plan.Cp, plan.Mp
@@ -178,6 +197,23 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
         own = plan.pad_rx(own)
         bb = plan.pad_rx(bb, fill=1.0)                      # [Cp]
         user_perm = jnp.asarray(plan.user_perm())           # [U] static
+        # the canonical u-blocking shared with the single engine: it
+        # divides M, so u-blocks never straddle a cluster — and with it
+        # a u-shard — boundary, and the partial fold can replay the
+        # full call's accumulation order
+        bu_c = canonical_block_u(M)
+        if combine == "u_sharded":
+            # virtual user axis [Cp * M]: real users keep their global
+            # c * M + m index (padded clusters append at the end), so
+            # shard cj owns the contiguous tile [cj*C_loc*M, ...).
+            # Padded clusters' virtual users get zero amp/w columns;
+            # their blocks are strictly trailing and the fold drops
+            # them (G_real below) — they never touch a real bit.
+            amp_v = jnp.pad(amp, ((0, 0), (0, (Cp - C) * M)))
+            own_v = jnp.pad(own, ((0, 0), (0, (Cp - C) * M)))
+            bk_c = min(8, topo.K)
+            Kp_c = _round_up(topo.K, bk_c)
+            G_real = C * M // bu_c
 
     X = plan.pad_users(jnp.asarray(X))   # inactive users: zero shards
     Y = plan.pad_users(jnp.asarray(Y))
@@ -290,12 +326,16 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
         amp_loc = jax.lax.dynamic_slice_in_dim(amp, ci * C_loc, C_loc, 0)
         own_loc = jax.lax.dynamic_slice_in_dim(own, ci * C_loc, C_loc, 0)
         bb_loc = jax.lax.dynamic_slice_in_dim(bb, ci * C_loc, C_loc, 0)
-        # block sizes depend only on the GLOBAL user count (never on the
-        # mesh), so the per-element accumulation order — and with it the
-        # bitwise mesh-invariance — is preserved; bigger blocks amortize
-        # the interpret-mode grid overhead at very large U.
-        blocks = (dict(block_u=1024, block_n=1024) if C * M >= 8192
-                  else {})
+        # block sizes depend only on the GLOBAL workload shape (never on
+        # the mesh), so the per-element accumulation order — and with it
+        # the bitwise mesh-invariance — is preserved: the u-blocking is
+        # the canonical one every fused cluster-hop path shares
+        # (block_n only retiles the independent symbol columns, so a
+        # bigger lane block at very large U amortizes interpret-mode
+        # grid overhead without touching a bit).
+        blocks = dict(block_u=bu_c)
+        if C * M >= 8192:
+            blocks["block_n"] = 1024
         y_re, y_im = fused_mac(
             _seed_words(key), t_re, t_im, amp_loc, own_loc, K=topo.K,
             sigma_h2=topo.sigma_h2, sigma_z2=topo.sigma_z2,
@@ -306,6 +346,72 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
         def collect(y):                       # [C_loc, N_loc] -> [Cp, N]
             y = jax.lax.all_gather(y, "user", axis=1, tiled=True)[:, :N]
             return jax.lax.all_gather(y, "cluster", axis=0, tiled=True)
+
+        est_re = collect(y_re / topo.K / scale)
+        est_im = collect(y_im / topo.K / scale)
+        return jnp.concatenate([est_re, est_im], axis=-1)   # [Cp, 2N]
+
+    def fused_cluster_estimate_u_sharded(key, flat_loc, P_t, ci, ui):
+        """U-sharded fused cluster hop: each cluster-axis shard runs
+        the partial-combine kernel over only its own user tile (all Cp
+        rx rows, local symbols), then every shard folds the gathered
+        per-tile accumulators in pinned ascending u-block order — a
+        fixed sequential chain (`fori_loop`), never a `psum` — with the
+        noise drawn exactly once per (rx, k, n) as a separate term on
+        the kernel's own counter stream (`fused_noise`).  The
+        `[U, N_loc]` symbol block never exists on any device: per-shard
+        symbol memory is O(U / mc * N_loc) + the K-resolved partials.
+        Returns the replicated [Cp, 2N] estimate, bitwise
+        `fused_cluster_estimate` (pinned by tests/test_exec_sharded.py).
+        """
+        U_loc = C_loc * M          # virtual users per cluster-axis shard
+
+        def to_tile(t):
+            # [C_loc, M_loc, N] local users -> this shard's user tile
+            # with local symbols.  Same all_to_all as the gathered
+            # path, but no cluster-axis gather: the shard keeps only
+            # its own C_loc clusters' users.  Slicing [:, :M] drops the
+            # padded per-cluster slots (pad_users appends them), so
+            # rows are the real users in c * M + m order.
+            t = jnp.pad(t, ((0, 0), (0, 0), (0, Np - N)))
+            t = jax.lax.all_to_all(t, "user", split_axis=2, concat_axis=1,
+                                   tiled=True)         # [C_loc, Mp, N_loc]
+            return t[:, :M].reshape(U_loc, N_loc)
+
+        t_re = P_t * to_tile(flat_loc[..., :N])
+        t_im = P_t * to_tile(flat_loc[..., N:])
+        u0 = ci * U_loc            # this tile's global u-block origin
+        amp_t = jax.lax.dynamic_slice_in_dim(amp_v, u0, U_loc, 1)
+        own_t = jax.lax.dynamic_slice_in_dim(own_v, u0, U_loc, 1)
+        blocks = dict(block_n=1024) if C * M >= 8192 else {}
+        words = _seed_words(key)
+        pr_re, pr_im, pm_re, pm_im = fused_mac_partials(
+            words, t_re, t_im, amp_t, own_t, K=topo.K,
+            sigma_h2=topo.sigma_h2, rx_base=0, u_base=u0,
+            n_base=ui * N_loc, block_u=bu_c, interpret=interpret,
+            **blocks)                       # 4 x [Cp, G_loc, Kp, N_loc]
+
+        def order(p):
+            # gather every shard's blocks and lay them out in global
+            # u-block order (shard d owns blocks [d*G_loc, (d+1)*G_loc)),
+            # then drop the strictly-trailing inactive-cluster blocks
+            p = jax.lax.all_gather(p, "cluster", axis=0)
+            G_loc = p.shape[2]
+            p = jnp.moveaxis(p, 0, 1).reshape(Cp, mc * G_loc, Kp_c, N_loc)
+            return p[:, :G_real]
+
+        z_re, z_im = fused_noise(words, Cp, Kp_c, N_loc, topo.sigma_z2,
+                                 rx_base=0, n_base=ui * N_loc)
+        y_re, y_im = fused_partials_reduce(
+            order(pr_re), order(pr_im), order(pm_re), order(pm_im),
+            z_re, z_im, K=topo.K)
+        # y is replicated over 'cluster' (every shard folded the same
+        # gathered blocks); the same per-element rescale as the
+        # gathered path, then one symbol-axis gather
+        scale = P_t * topo.sigma_h2 * bb[:, None]
+
+        def collect(y):                       # [Cp, N_loc] -> [Cp, N]
+            return jax.lax.all_gather(y, "user", axis=1, tiled=True)[:, :N]
 
         est_re = collect(y_re / topo.K / scale)
         est_im = collect(y_im / topo.K / scale)
@@ -323,7 +429,10 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
         on the gathered real block — the literal single-engine
         program, hence bitwise cross-engine/mesh)."""
         if fused_cluster_hop:
-            est = fused_cluster_estimate(key, flat_loc, P_t, ci, ui)
+            est = (fused_cluster_estimate_u_sharded(key, flat_loc, P_t,
+                                                    ci, ui)
+                   if combine == "u_sharded" else
+                   fused_cluster_estimate(key, flat_loc, P_t, ci, ui))
             if partial:
                 resc = agg.attendance_rescale(rx_w, claimed)    # [C]
                 est = est * plan.pad_rx(resc, fill=1.0)[:, None]
@@ -477,7 +586,8 @@ def _build_round_parts(loss_fn: Callable, opt: Optimizer, topo: Topology,
 
 def make_sharded_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
                           cfg: WHFLConfig, spec: agg.FlatSpec, X, Y, mesh,
-                          trace_counter: Optional[list] = None) -> Callable:
+                          trace_counter: Optional[list] = None,
+                          combine: str = "gathered") -> Callable:
     """Build ``round_fn(state, key, P_t, P_is_t) -> state`` running one
     W-HFL round sharded over `mesh` (axes ``("cluster", "user")``).
 
@@ -494,7 +604,7 @@ def make_sharded_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
     """
     _round, state_spec, X, Y = _build_round_parts(
         loss_fn, opt, topo, cfg, spec, X, Y, mesh,
-        trace_counter=trace_counter)
+        trace_counter=trace_counter, combine=combine)
     sharded = shard_map(
         _round, mesh=mesh,
         in_specs=(state_spec, P(), P(), P(),
@@ -511,7 +621,8 @@ def make_sharded_round_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
 def make_sharded_chunk_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
                           cfg: WHFLConfig, spec: agg.FlatSpec, X, Y, mesh,
                           eval_fn: Optional[Callable] = None,
-                          trace_counter: Optional[list] = None) -> Callable:
+                          trace_counter: Optional[list] = None,
+                          combine: str = "gathered") -> Callable:
     """Build ``chunk_fn(state, key, P_win, P_is_win) -> (state, key,
     metrics)`` running ``len(P_win)`` sharded W-HFL rounds in a single
     `lax.scan` *inside* one shard_map — the sharded-engine counterpart
@@ -528,7 +639,7 @@ def make_sharded_chunk_fn(loss_fn: Callable, opt: Optimizer, topo: Topology,
     """
     _round, state_spec, X, Y = _build_round_parts(
         loss_fn, opt, topo, cfg, spec, X, Y, mesh,
-        trace_counter=trace_counter)
+        trace_counter=trace_counter, combine=combine)
 
     def _chunk(state, key, P_win, P_is_win, X_loc, Y_loc):
         def body(carry, Ps):

@@ -23,7 +23,9 @@ import jax.numpy as jnp
 from repro.core.topology import PadPlan, pad_plan
 from repro.core.whfl import init_round_state
 from repro.exec.mesh import make_device_mesh, parse_mesh
-from repro.exec.round import make_sharded_chunk_fn, make_sharded_round_fn
+from repro.exec.round import (COMBINES, make_sharded_chunk_fn,
+                              make_sharded_round_fn)
+from repro.kernels.fused_mac import _round_up, canonical_block_u
 from repro.sim.scenario import Scenario
 from repro.sim.sweep import SweepRunner
 
@@ -53,13 +55,18 @@ class ShardedSweepRunner(SweepRunner):
                  driver: str = "stepwise", warmup: bool = False,
                  telemetry: bool = False, trace=None,
                  checkpoint=None, ckpt_every: int = 1,
-                 resume: bool = False, guard: str = "off", faults=None):
+                 resume: bool = False, guard: str = "off", faults=None,
+                 combine: str = "gathered"):
         super().__init__(scenarios, seeds=seeds, quick=quick,
                          keep_state=keep_state, batch="map",
                          driver=driver, warmup=warmup,
                          telemetry=telemetry, trace=trace,
                          checkpoint=checkpoint, ckpt_every=ckpt_every,
                          resume=resume, guard=guard, faults=faults)
+        if combine not in COMBINES:
+            raise ValueError(f"unknown combine {combine!r}; known: "
+                             f"{', '.join(COMBINES)}")
+        self.combine = combine
         self.mesh_shape = parse_mesh(mesh)
         self.mesh = make_device_mesh(self.mesh_shape)
 
@@ -115,7 +122,8 @@ class ShardedSweepRunner(SweepRunner):
     def _build_round(self, sc, loss_fn, opt, topo, cfg, spec, X, Y, counter):
         round_fn = make_sharded_round_fn(loss_fn, opt, topo, cfg, spec,
                                          X, Y, self.mesh,
-                                         trace_counter=counter)
+                                         trace_counter=counter,
+                                         combine=self.combine)
         return self._batch_round(round_fn)
 
     def _build_chunk(self, sc, loss_fn, opt, topo, cfg, spec, X, Y, counter,
@@ -127,7 +135,8 @@ class ShardedSweepRunner(SweepRunner):
         and the carried (state, keys) buffers are donated."""
         chunk_fn = make_sharded_chunk_fn(loss_fn, opt, topo, cfg, spec,
                                          X, Y, self.mesh, eval_fn=eval_fn,
-                                         trace_counter=counter)
+                                         trace_counter=counter,
+                                         combine=self.combine)
 
         def batched(st, ks, P_win, P_is_win):
             return jax.lax.map(
@@ -135,13 +144,34 @@ class ShardedSweepRunner(SweepRunner):
 
         return jax.jit(batched, donate_argnums=(0, 1))
 
-    def _exec_info(self, topo=None) -> Dict:
+    def _exec_info(self, topo=None, two_n=None) -> Dict:
         mc, mu = self.mesh_shape
         info = {"name": "sharded", "mesh": f"{mc}x{mu}",
                 "device_count": mc * mu, "batch": self.batch,
-                "padded": None}
+                "padded": None, "combine": self.combine}
         if topo is not None:
             plan = self._pad_plan(topo)
             if not plan.is_identity:
                 info["padded"] = f"{plan.Cp}x{plan.Mp}"
+            if two_n is not None:
+                info["peak_symbol_bytes"] = self._peak_symbol_bytes(
+                    topo, plan, two_n)
         return info
+
+    def _peak_symbol_bytes(self, topo, plan, two_n) -> int:
+        """Per-device peak bytes of fused cluster-hop *symbol-domain*
+        buffers (f32 tx symbols + the K-resolved partial accumulators),
+        the memory the ``combine`` strategy actually moves: gathered
+        materializes the full [Cp*Mp, N_loc] block on every device;
+        u_sharded keeps only the shard's own user tile plus the
+        (much smaller for large U) gathered partials."""
+        mc, mu = self.mesh_shape
+        N_loc = _round_up(two_n // 2, mu) // mu
+        if self.combine == "gathered":
+            return 8 * plan.Cp * plan.Mp * N_loc
+        bu = canonical_block_u(topo.M)
+        bk = min(8, topo.K)
+        Kp = _round_up(topo.K, bk)
+        G_tot = plan.Cp * topo.M // bu
+        return (8 * (plan.Cp // mc) * plan.Mp * N_loc
+                + 16 * plan.Cp * G_tot * Kp * N_loc)

@@ -74,6 +74,25 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+def canonical_block_u(M: int, cap: int = 1024) -> int:
+    """The u-block size every fused *cluster-hop* path shares.
+
+    The partial-combine mode (`fused_mac_partials`) makes the per-user
+    accumulation order observable across devices, so bitwise equality
+    between the single engine, the gathered sharded hop and the
+    u-sharded partial fold requires all three to tile the user axis
+    identically.  This canonical size is a pure function of the
+    per-cluster user count M: it always divides M (so u-blocks never
+    straddle a cluster — and with it a u-shard — boundary) and halves
+    down from M only while above `cap`, keeping interpret-mode grid
+    overhead bounded at large M.
+    """
+    bu = max(int(M), 1)
+    while bu > cap and bu % 2 == 0:
+        bu //= 2
+    return bu
+
+
 def _k_stride(K: int) -> int:
     """Counter stride of the antenna axis: fixed per K (never per block
     size) so draws are invariant to blocking.  Uniqueness of the
@@ -284,6 +303,222 @@ def fused_mac(seed, t_re, t_im, amp, w, *, K: int, sigma_h2: float,
         ) if not interpret else None,
     )(words, t_re, t_im, amp.astype(jnp.float32), w.astype(jnp.float32))
     return y[:, 0, :N], y[:, 1, :N]
+
+
+# ---------------------------------------------------------------------------
+# partial-combine mode: per-u-tile accumulators + pinned-order fold
+# ---------------------------------------------------------------------------
+
+def _fused_partial_kernel(words_ref, t_re_ref, t_im_ref, amp_ref, w_ref,
+                          pr_re_ref, pr_im_ref, pm_re_ref, pm_im_ref, *,
+                          Kstride: int, sigma_h: float, bu: int, bk: int,
+                          bn: int):
+    """One (rx, n, k, u) block of `fused_mac_partials`.
+
+    The per-u-block body is the *literal* accumulation expression of
+    `_fused_kernel` — same counters, same [bu, bk, bn] shapes, same
+    ``jnp.sum(..., axis=0)`` — but instead of folding into scratch it
+    writes each block's sum to its own output slot, so a caller owning
+    only a tile of the user axis can emit its blocks and a pinned-order
+    host of the blocks can replay the full kernel's accumulation
+    bit-exactly (`fused_partials_reduce`).  No noise: z is a separate
+    term keyed on the same counter stream (`fused_noise`).
+    """
+    c = pl.program_id(0)
+    ni, ki, ui = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+    s0, s1 = words_ref[0, 0], words_ref[0, 1]
+    rx_base, u_base, n_base = (words_ref[0, 2], words_ref[0, 3],
+                               words_ref[0, 4])
+    rx = rx_base + c.astype(jnp.uint32)
+
+    k0 = ki * bk
+    n0 = ni * bn
+    kk = jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 0) + k0.astype(
+        jnp.uint32)
+    nn = (jax.lax.broadcasted_iota(jnp.uint32, (bk, bn), 1)
+          + n0.astype(jnp.uint32) + n_base)
+
+    hk0, hk1 = _stream_keys(s0, s1, rx, _TAG_CHAN)
+    uu = (jax.lax.broadcasted_iota(jnp.uint32, (bu, bk, bn), 0)
+          + (ui * bu).astype(jnp.uint32) + u_base)
+    w0 = uu * np.uint32(Kstride) + kk[None, :, :]
+    w1 = jnp.broadcast_to(nn[None, :, :], (bu, bk, bn))
+    g_re, g_im = _cx_normal(hk0, hk1, w0, w1, sigma_h)
+
+    amp = amp_ref[0, :]                       # [bu]
+    wa = (w_ref[0, :] * amp)[:, None, None]
+    h_re = amp[:, None, None] * g_re
+    h_im = amp[:, None, None] * g_im
+    t_re = t_re_ref[...][:, None, :]          # [bu, 1, bn]
+    t_im = t_im_ref[...][:, None, :]
+
+    pr_re_ref[0, 0] = jnp.sum(h_re * t_re - h_im * t_im, axis=0)
+    pr_im_ref[0, 0] = jnp.sum(h_re * t_im + h_im * t_re, axis=0)
+    pm_re_ref[0, 0] = jnp.sum(wa * g_re, axis=0)
+    pm_im_ref[0, 0] = jnp.sum(wa * g_im, axis=0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("K", "sigma_h2", "block_n", "block_k",
+                              "block_u", "interpret"))
+def fused_mac_partials(seed, t_re, t_im, amp, w, *, K: int, sigma_h2: float,
+                       rx_base=None, u_base=None, n_base=None,
+                       block_n: int = 512, block_k: int = 8,
+                       block_u: int = 32, interpret: bool = False):
+    """Partial-combine mode of `fused_mac`: per-u-block accumulators.
+
+    Same contract as `fused_mac` for t [U, N] / amp, w [B, U] and the
+    counter bases, except that U must be a multiple of `block_u` (the
+    caller aligns its tile to the canonical blocking —
+    `canonical_block_u`) and the result is the K-resolved
+    *pre-contraction* accumulator blocks
+
+        pr[b, g, k, n] = sum_{u in block g} h[b,u,k,n] t[u,n]   (re, im)
+        pm[b, g, k, n] = sum_{u in block g} w[b,u] h[b,u,k,n]   (re, im)
+
+    as four float32 [B, G, Kp, N] arrays with G = U // block_u and Kp
+    the padded antenna row count (``_round_up(K, block_k)`` — padded
+    rows carry the same generated garbage the full kernel masks at its
+    finalize, and `fused_partials_reduce` masks identically).  Noise is
+    NOT included: draw it once globally with `fused_noise` and hand it
+    to the fold.  Summing a tile's blocks into the enclosing call's
+    fold in ascending global block order replays `fused_mac`'s scratch
+    accumulation bit-exactly (pinned by tests/test_fused_mac.py).
+    """
+    U, N = t_re.shape
+    B = amp.shape[0]
+    bn = min(block_n, _round_up(N, 128))
+    bk = min(block_k, _round_up(K, 1))
+    if bk > 128:
+        raise ValueError(f"block_k must be <= 128, got {bk}")
+    bu = block_u
+    if U % bu:
+        raise ValueError(
+            f"partial combine needs U ({U}) divisible by block_u ({bu}) "
+            f"so u-blocks align across tiles")
+    Np, Kp = _round_up(N, bn), _round_up(K, bk)
+    G = U // bu
+
+    if Np != N:
+        t_re = jnp.pad(t_re, ((0, 0), (0, Np - N)))
+        t_im = jnp.pad(t_im, ((0, 0), (0, Np - N)))
+
+    base = jnp.stack([jnp.asarray(0 if v is None else v, jnp.uint32)
+                      for v in (rx_base, u_base, n_base)])
+    words = jnp.concatenate([seed.astype(jnp.uint32).reshape(2), base,
+                             jnp.zeros((3,), jnp.uint32)]).reshape(1, 8)
+    grid = (B, Np // bn, Kp // bk, G)
+    kernel = functools.partial(
+        _fused_partial_kernel, Kstride=_k_stride(K),
+        sigma_h=float(np.sqrt(sigma_h2 / 2.0)), bu=bu, bk=bk, bn=bn)
+
+    seed_spec = pl.BlockSpec((1, 8), lambda b, n, k, u: (0, 0))
+    t_spec = pl.BlockSpec((bu, bn), lambda b, n, k, u: (u, n))
+    a_spec = pl.BlockSpec((1, bu), lambda b, n, k, u: (b, u))
+    p_spec = pl.BlockSpec((1, 1, bk, bn), lambda b, n, k, u: (b, u, k, n))
+    p_shape = jax.ShapeDtypeStruct((B, G, Kp, Np), jnp.float32)
+
+    # every grid step writes its own disjoint output block — no scratch
+    # carry, so all four axes are parallel when compiled
+    pr_re, pr_im, pm_re, pm_im = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[seed_spec, t_spec, t_spec, a_spec, a_spec],
+        out_specs=[p_spec] * 4,
+        out_shape=[p_shape] * 4,
+        interpret=interpret,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=(
+                "parallel", "parallel", "parallel", "parallel"))
+        ) if not interpret else None,
+    )(words, t_re, t_im, amp.astype(jnp.float32), w.astype(jnp.float32))
+    return (pr_re[..., :N], pr_im[..., :N],
+            pm_re[..., :N], pm_im[..., :N])
+
+
+def fused_noise(seed, B: int, K: int, N: int, sigma_z2: float,
+                rx_base=0, n_base=0):
+    """The kernel's receiver-noise draws, as a separate term.
+
+    Returns (z_re, z_im), each float32 [B, K, N] — bitwise the z values
+    `_fused_kernel` seeds its r scratch with at ``ui == 0`` (same
+    `_TAG_NOISE` stream, same ``(k, n + n_base)`` counters; threefry +
+    Box-Muller are elementwise, so blocking cannot change a draw).
+    Partial-combine callers pass the *padded* antenna row count Kp for
+    K: the full kernel draws z for its padded rows too and masks them
+    only at the finalize, so the fold must replay exactly that.
+    """
+    seed = jnp.asarray(seed).astype(jnp.uint32).reshape(2)
+    kk = jnp.arange(K, dtype=jnp.uint32)[:, None]
+    nn = (jnp.arange(N, dtype=jnp.uint32)
+          + jnp.asarray(n_base, jnp.uint32))[None, :]
+    w0 = jnp.broadcast_to(kk, (K, N))
+    w1 = jnp.broadcast_to(nn, (K, N))
+    s_z = float(np.sqrt(sigma_z2 / 2.0))
+
+    def one_rx(b):
+        zk0, zk1 = _stream_keys(seed[0], seed[1], b, _TAG_NOISE)
+        return _cx_normal(zk0, zk1, w0, w1, s_z)
+
+    rx0 = jnp.asarray(rx_base, jnp.uint32)
+    return jax.lax.map(one_rx, jnp.arange(B, dtype=jnp.uint32) + rx0)
+
+
+def fused_partials_reduce(pr_re, pr_im, pm_re, pm_im, z_re, z_im, *,
+                          K: int, block_k: int = 8):
+    """Pinned-order fold of partial-combine blocks -> `fused_mac`'s y.
+
+    pr/pm: float32 [B, G, Kp, N] per-u-block accumulators
+    (`fused_mac_partials`), already concatenated in ascending *global*
+    block order and pre-sliced to exactly the blocks to fold (a caller
+    with trailing inactive blocks drops them here, not with zero adds);
+    z: float32 [B, Kp, N] noise (`fused_noise` over the padded Kp).
+
+    Replays the full kernel's accumulation order exactly: r starts from
+    z and mf from zero (the ``ui == 0`` scratch init), blocks fold in
+    ascending order via `fori_loop` — a fixed sequential chain, never a
+    `psum`, whose accumulation order would follow the device count —
+    and the finalize masks padded antenna rows and contracts one
+    block_k-row block at a time in ascending k order, matching the
+    kernel's K grid axis.  Returns (y_re, y_im), each [B, N], bitwise
+    `fused_mac` on the enclosing full user range.
+
+    Bitwise caveat: XLA:CPU's fusion (FMA formation) of the finalize's
+    ``a * p + b * q`` depends on the enclosing program, so the equality
+    holds when partials and fold run inside ONE jitted program — the
+    shape of both the sharded executor and `fused_mac` itself (whose
+    interpret-mode kernel is inlined jax ops under its own jit).
+    Calling the pieces eagerly op-by-op computes the same sums with a
+    different rounding of the contraction.  tests/test_fused_mac.py
+    pins the one-program equality across tilings and padded K/N.
+    """
+    B, G, Kp, N = pr_re.shape
+    bk = min(block_k, _round_up(K, 1))
+    if Kp != _round_up(K, bk):
+        raise ValueError(
+            f"partials carry Kp={Kp} antenna rows but K={K}, "
+            f"block_k={bk} implies {_round_up(K, bk)}")
+
+    def fold(g, acc):
+        r_re, r_im, mf_re, mf_im = acc
+        return (r_re + pr_re[:, g], r_im + pr_im[:, g],
+                mf_re + pm_re[:, g], mf_im + pm_im[:, g])
+
+    init = (z_re, z_im, jnp.zeros_like(z_re), jnp.zeros_like(z_im))
+    r_re, r_im, mf_re, mf_im = jax.lax.fori_loop(0, G, fold, init)
+
+    kk = np.arange(Kp, dtype=np.uint32)
+    y_re = jnp.zeros((B, N), jnp.float32)
+    y_im = jnp.zeros((B, N), jnp.float32)
+    for ki in range(Kp // bk):
+        sl = slice(ki * bk, (ki + 1) * bk)
+        mask = jnp.asarray(
+            (kk[sl] < np.uint32(K)).astype(np.float32))[None, :, None]
+        a, b = mf_re[:, sl], mf_im[:, sl]
+        p, q = r_re[:, sl], r_im[:, sl]
+        y_re = y_re + jnp.sum(mask * (a * p + b * q), axis=1)
+        y_im = y_im + jnp.sum(mask * (a * q - b * p), axis=1)
+    return y_re, y_im
 
 
 # ---------------------------------------------------------------------------

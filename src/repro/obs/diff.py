@@ -4,8 +4,10 @@
 
 Compares two structured JSON documents (`repro.sim.sweep` sweep
 records, `BENCH_*` documents, or any JSON tree) and reports, per
-numeric path, the maximum float32 ULP distance — the number of
-representable float32 values between the two numbers.  Non-numeric
+numeric path, the maximum ULP distance — the number of representable
+float values between the two numbers, measured on the float32 grid
+when both values are exactly f32-representable and on the float64 grid
+otherwise (see `ulp_distance`).  Non-numeric
 values (scenario configs, schema tags, round indices) must match
 exactly; runtime metadata that legitimately differs between runs
 (wall-clock, trace counts, engine/driver info, provenance) is skipped
@@ -20,7 +22,7 @@ instead of being a comment: the report names every non-bitwise path
 and its exact ULP distance, so a layout change that widens the residue
 fails loudly.
 
-ULP distance is computed on the float32 bit patterns through the usual
+ULP distance is computed on the float bit patterns through the usual
 sign-magnitude -> ordered-integer transform (negative floats map below
 zero), so it is exact across the whole float range; ``NaN == NaN`` and
 ``+0 == -0`` count as bitwise-equal.  Exit code 0 iff there are no
@@ -46,17 +48,52 @@ DEFAULT_IGNORE = frozenset({
 })
 
 
-def ulp_distance(a, b) -> np.ndarray:
-    """Elementwise float32 ULP distance (int64).  NaN-vs-NaN and
-    +0-vs--0 are distance 0."""
-    x = np.asarray(a, np.float32)
-    y = np.asarray(b, np.float32)
+def _ulp32(x, y) -> np.ndarray:
     xi = x.view(np.int32).astype(np.int64)
     yi = y.view(np.int32).astype(np.int64)
     # sign-magnitude -> ordered integers: negatives map to -(magnitude)
     xi = np.where(xi < 0, -(xi & 0x7FFFFFFF), xi)
     yi = np.where(yi < 0, -(yi & 0x7FFFFFFF), yi)
-    d = np.abs(xi - yi)
+    return np.abs(xi - yi)
+
+
+def _ulp64(x, y) -> np.ndarray:
+    # same sign-magnitude ordering on the float64 bit patterns; the
+    # distance is assembled in uint64 (magnitudes are <= 2^63 - 1, so
+    # |mx - my| and mx + my both fit) and saturated into int64 — a
+    # saturated distance is astronomically past any --max-ulp anyway
+    mask = np.int64(0x7FFFFFFFFFFFFFFF)
+    xi = x.view(np.int64)
+    yi = y.view(np.int64)
+    mx = (xi & mask).astype(np.uint64)
+    my = (yi & mask).astype(np.uint64)
+    same_sign = (xi < 0) == (yi < 0)
+    d = np.where(same_sign, np.maximum(mx, my) - np.minimum(mx, my),
+                 mx + my)
+    return np.minimum(
+        d, np.uint64(np.iinfo(np.int64).max)).astype(np.int64)
+
+
+def ulp_distance(a, b) -> np.ndarray:
+    """Elementwise ULP distance (int64).  NaN-vs-NaN and +0-vs--0 are
+    distance 0.
+
+    Measured on the float32 bit patterns when both values are exactly
+    float32-representable (the common case: metrics serialized from f32
+    device arrays — two *distinct* f32-exact values are always >= 1 f32
+    ULP apart, so nothing is lost), and on the float64 bit patterns
+    otherwise.  The f64 path is what keeps genuine float64 content
+    (e.g. f64 power-schedule-derived scalars) honest: a pair differing
+    below f32 precision used to collapse to distance 0 under an
+    unconditional f32 cast, silently passing --max-ulp 0 gates."""
+    x = np.asarray(a, np.float64)
+    y = np.asarray(b, np.float64)
+    with np.errstate(over="ignore"):    # f64 beyond f32 range -> inf,
+        x32 = x.astype(np.float32)      # which is simply "not f32-
+        y32 = y.astype(np.float32)      # exact": the f64 path handles it
+    exact32 = (((x32.astype(np.float64) == x) | np.isnan(x))
+               & ((y32.astype(np.float64) == y) | np.isnan(y)))
+    d = np.where(exact32, _ulp32(x32, y32), _ulp64(x, y))
     return np.where(np.isnan(x) & np.isnan(y), 0, d)
 
 

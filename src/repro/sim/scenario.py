@@ -264,7 +264,7 @@ for _nb in (1, 3):
 # Deliberately tiny on every axis that is not U: the point is the OTA
 # hop at U = C*M users, not convergence.
 SCALE_FAMILIES = ("scale_u256", "scale_u256_bench", "scale_u1024",
-                  "scale_u4096", "scale_u16384")
+                  "scale_u4096", "scale_u16384", "scale_u65536")
 
 for _U, _C, _M in ((256, 4, 64), (1024, 8, 128), (4096, 16, 256)):
     register_scenario(Scenario(
@@ -296,4 +296,17 @@ register_scenario(Scenario(
     tau=1, I=1, batch=8, mode="whfl", ota_mode="faithful",
     ota_backend="fused", C=16, M=1024, K=4, K_ps=4, sigma_z2=1.0,
     total_IT=1, lr=5e-2, opt="sgd", n_train=2 * 16384, n_test=128,
+    eval_every=1))
+
+# The u-sharded-only tier (lever (a) of ROADMAP's "Road to U = 10^6"):
+# at 65536 users even the sharded engine's gathered combine rebuilds
+# the full [U, N_loc] symbol block on every device; this scenario is
+# sized for `--exec sharded --combine u_sharded`, where each
+# cluster-axis shard holds only its own user tile and the cross-shard
+# fold moves K-resolved partial accumulators instead of symbols.
+register_scenario(Scenario(
+    name="scale_u65536", dataset="mnist", partition="iid",
+    tau=1, I=1, batch=8, mode="whfl", ota_mode="faithful",
+    ota_backend="fused", C=16, M=4096, K=4, K_ps=4, sigma_z2=1.0,
+    total_IT=1, lr=5e-2, opt="sgd", n_train=2 * 65536, n_test=128,
     eval_every=1))

@@ -324,12 +324,13 @@ class SweepRunner:
                               split_fn=jax.vmap(jax.random.split))
         return jax.jit(chunk, donate_argnums=(0, 1))
 
-    def _exec_info(self, topo=None) -> Dict:
+    def _exec_info(self, topo=None, two_n=None) -> Dict:
         """Execution-engine metadata recorded with every result.
         `device_count` is the number of devices the engine *uses* (not
         how many are visible): always 1 for the single-device engine.
-        `topo` (when given) lets engines record workload-dependent
-        metadata — the sharded engine reports its padded shape."""
+        `topo`/`two_n` (when given) let engines record
+        workload-dependent metadata — the sharded engine reports its
+        padded shape and per-device peak symbol-block bytes."""
         return {"name": "single", "mesh": None,
                 "device_count": 1, "batch": self.batch}
 
@@ -509,7 +510,8 @@ class SweepRunner:
                 self._emit("telemetry", scenario=sc.name, round=rd,
                            summary=summarize(t))
 
-        exec_info = {**self._exec_info(topo), "driver": self.driver,
+        exec_info = {**self._exec_info(topo, two_n=spec.two_n),
+                     "driver": self.driver,
                      "dispatches": dispatches, "drive_seconds": drive_s,
                      "warmup": self.warmup}
         if guard_on:
@@ -858,6 +860,16 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
                          "2x4); on CPU force host devices with "
                          "XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--combine", default="gathered",
+                    choices=["gathered", "u_sharded"],
+                    help="fused cluster-hop distribution for --exec "
+                         "sharded: gathered (default) all-gathers the "
+                         "full [U, N_loc] symbol block per device; "
+                         "u_sharded keeps each cluster-shard's own user "
+                         "tile, runs the partial-combine kernel and "
+                         "folds per-tile accumulators in pinned global "
+                         "u-block order — bitwise equal to gathered and "
+                         "to the single engine, O(U/mc) symbol memory")
     ap.add_argument("--telemetry", action="store_true",
                     help="compute the in-program per-round diagnostics "
                          "block (repro.obs.telemetry: per-hop SNR, noise "
@@ -935,6 +947,19 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
     if args.checkpoint and len(args.driver.split(",")) > 1:
         ap.error("--checkpoint needs a single --driver (the round "
                  "cursor keys one driving schedule)")
+    # checkpoint-knob validation happens HERE, not downstream: a knob
+    # that silently does nothing (e.g. --ckpt-every 5 with no
+    # --checkpoint dir) is a run the user believes is protected and
+    # isn't
+    if args.ckpt_every < 1:
+        ap.error(f"--ckpt-every must be >= 1 windows, "
+                 f"got {args.ckpt_every}")
+    if args.resume and not args.checkpoint:
+        ap.error("--resume needs --checkpoint DIR (nowhere to resume "
+                 "from)")
+    if args.ckpt_every != 1 and not args.checkpoint:
+        ap.error("--ckpt-every needs --checkpoint DIR (no checkpoints "
+                 "are being cut)")
     tracer = None
     if args.trace:
         from repro.obs.trace import TraceWriter   # lazy: obs layer
@@ -942,30 +967,37 @@ def main(argv: Optional[Sequence[str]] = None) -> Dict:
     profile_cm = (jax.profiler.trace(args.profile) if args.profile
                   else contextlib.nullcontext())
     results = []
-    with profile_cm:
-        for driver in args.driver.split(","):
-            try:
-                # lazy import: repro.exec builds on this module
-                from repro.exec import make_runner
-                runner = make_runner(args.exec_name,
-                                     args.scenarios.split(","),
-                                     seeds=seeds, quick=args.quick,
-                                     batch=args.batch, mesh=args.mesh,
-                                     driver=driver.strip(),
-                                     warmup=args.warmup,
-                                     telemetry=args.telemetry,
-                                     trace=tracer,
-                                     keep_state=bool(args.state_out),
-                                     checkpoint=args.checkpoint,
-                                     ckpt_every=args.ckpt_every,
-                                     resume=args.resume,
-                                     guard=args.guard, faults=faults)
-            except (KeyError, ValueError) as e:
-                ap.error(str(e.args[0] if e.args else e))
-            results.extend(runner.run())
-    if tracer is not None:
-        tracer.close()
-        print("wrote", args.trace)
+    # close the journal even when a scenario raises mid-sweep: the
+    # partial journal ends with run_end and stays machine-readable
+    # (repro.obs.trace.validate_trace --allow-truncated-tail)
+    try:
+        with profile_cm:
+            for driver in args.driver.split(","):
+                try:
+                    # lazy import: repro.exec builds on this module
+                    from repro.exec import make_runner
+                    runner = make_runner(args.exec_name,
+                                         args.scenarios.split(","),
+                                         seeds=seeds, quick=args.quick,
+                                         batch=args.batch,
+                                         mesh=args.mesh,
+                                         driver=driver.strip(),
+                                         warmup=args.warmup,
+                                         telemetry=args.telemetry,
+                                         trace=tracer,
+                                         keep_state=bool(args.state_out),
+                                         checkpoint=args.checkpoint,
+                                         ckpt_every=args.ckpt_every,
+                                         resume=args.resume,
+                                         guard=args.guard, faults=faults,
+                                         combine=args.combine)
+                except (KeyError, ValueError) as e:
+                    ap.error(str(e.args[0] if e.args else e))
+                results.extend(runner.run())
+    finally:
+        if tracer is not None:
+            tracer.close()
+            print("wrote", args.trace)
     doc = sweep_to_json(results, quick=args.quick)
     for line in csv_lines(doc):
         print(line)

@@ -186,6 +186,63 @@ def test_dispatch_ratio_missing_counts_never_pass(write, capsys):
 
 
 # ---------------------------------------------------------------------------
+# memory-ratio gate (combine=gathered vs u_sharded, PR 10)
+# ---------------------------------------------------------------------------
+
+def crec(combine, peak, scenario="scale_u16384", rps=1.0, mesh="8x1"):
+    r = rec(scenario=scenario, rps=rps, name="sharded", mesh=mesh)
+    r["exec"]["combine"] = combine
+    r["exec"]["peak_symbol_bytes"] = peak
+    return r
+
+
+def test_memory_ratio_gate_passes_and_keys_on_combine(write, capsys):
+    fresh = [crec("gathered", 4096), crec("u_sharded", 1024)]
+    # combine joins the record key: two same-mesh records do NOT
+    # collide in the regression map, and the 4x reduction passes
+    assert bench_check._key(fresh[0]) != bench_check._key(fresh[1])
+    # `gathered` IS the legacy behavior — it keys identically to a
+    # pre-combine record, so committed baselines keep gating fresh
+    # gathered runs instead of [skip]ing them
+    legacy = rec(scenario="scale_u16384", rps=1.0, name="sharded",
+                 mesh="8x1")
+    assert bench_check._key(fresh[0]) == bench_check._key(legacy)
+    assert run(write, fresh, [crec("gathered", 4096)],
+               ["--expect-memory-ratio", "scale_u16384:4"]) == 0
+    out = capsys.readouterr().out
+    assert "4.00x reduction" in out
+    # the scale family prints the rounds/sec-per-user trend
+    assert "rounds/s/user" in out
+
+
+def test_memory_ratio_trips_below_requirement(write, capsys):
+    fresh = [crec("gathered", 4096), crec("u_sharded", 2048)]
+    assert run(write, fresh, [crec("gathered", 4096)],
+               ["--expect-memory-ratio", "scale_u16384:4"]) == 1
+    assert "2.00x < required 4.0x" in capsys.readouterr().err
+
+
+def test_memory_ratio_needs_both_combines_and_bytes(write, capsys):
+    fresh = [crec("gathered", 4096)]
+    assert run(write, fresh, fresh,
+               ["--expect-memory-ratio", "scale_u16384:4"]) == 1
+    assert "needs both" in capsys.readouterr().err
+    fresh = [crec("gathered", None), crec("u_sharded", 1024)]
+    assert run(write, fresh, [crec("gathered", None)],
+               ["--expect-memory-ratio", "scale_u16384:4"]) == 1
+    assert "peak_symbol_bytes missing" in capsys.readouterr().err
+
+
+def test_trajectory_records_combine_and_per_user_rate():
+    r = bench_check._trajectory_record(crec("u_sharded", 1024, rps=2.0))
+    assert r["combine"] == "u_sharded"
+    assert r["peak_symbol_bytes"] == 1024
+    assert r["rounds_per_sec_per_user"] == 2.0 / 16384
+    plain = bench_check._trajectory_record(rec())
+    assert "combine" not in plain and "rounds_per_sec_per_user" not in plain
+
+
+# ---------------------------------------------------------------------------
 # CLI / document plumbing
 # ---------------------------------------------------------------------------
 

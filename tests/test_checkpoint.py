@@ -127,3 +127,29 @@ def test_save_step_prunes_with_custom_prefix(tmp_path):
     save_step(d, 6, {"s": np.int64(6)}, keep=2, prefix="ft_")
     assert os.path.exists(os.path.join(d, "other_1.npz"))
     assert latest(d, prefix="ft_").endswith("ft_6.npz")
+
+
+def test_stray_non_numeric_checkpoints_are_skipped(tmp_path):
+    """Regression: a stray `ckpt_best.npz` (hand-copied pin) or a
+    foreign prefix sharing the stem (`ckpt_best_7.npz`) used to crash
+    `latest` and `save_step` with ValueError in the numeric sort —
+    both must skip it, and `save_step` must never prune it."""
+    d = str(tmp_path)
+    save(os.path.join(d, "ckpt_best.npz"), {"s": np.int64(0)})
+    save(os.path.join(d, "ckpt_best_7.npz"), {"s": np.int64(0)})
+    assert latest(d) is None                 # no *step* checkpoint yet
+    for step in (1, 2, 3):
+        save_step(d, step, {"s": np.int64(step)}, keep=2)
+    assert latest(d).endswith("ckpt_3.npz")
+    kept = sorted(f for f in os.listdir(d) if f.endswith(".npz"))
+    assert kept == ["ckpt_2.npz", "ckpt_3.npz", "ckpt_best.npz",
+                    "ckpt_best_7.npz"]
+
+
+def test_save_step_rejects_keep_zero(tmp_path):
+    """Regression: keep=0 used to silently keep everything
+    (`cands[:-0]` is the whole list) — it must be rejected."""
+    with pytest.raises(ValueError, match="keep >= 1"):
+        save_step(str(tmp_path), 1, {"s": np.int64(1)}, keep=0)
+    with pytest.raises(ValueError, match="keep >= 1"):
+        save_step(str(tmp_path), 1, {"s": np.int64(1)}, keep=-2)

@@ -100,11 +100,120 @@ def test_scale_u256_sharded_1x1_vs_2x4_bitwise_and_seed_slice():
     assert tuple(sorted(rec)) == tuple(sorted(RECORD_KEYS))
     ex = dict(rec["exec"])
     assert ex.pop("drive_seconds") > 0
+    assert ex.pop("peak_symbol_bytes") > 0
     assert ex == {"name": "sharded", "mesh": "2x4", "device_count": 8,
                   "batch": "map", "driver": "stepwise", "padded": None,
-                  "dispatches": 2 * 2 + 2, "warmup": False}
+                  "combine": "gathered", "dispatches": 2 * 2 + 2,
+                  "warmup": False}
     print("OK")
     """)
+
+
+# ---------------------------------------------------------------------------
+# combine=u_sharded: the partial fused combine (subprocess, 8 devices)
+# ---------------------------------------------------------------------------
+
+def test_u_sharded_combine_bitwise_vs_gathered_and_single():
+    """The tentpole contract: `combine=u_sharded` — per-shard partial
+    kernels + the pinned-order cross-shard fold — is bitwise equal
+    (metrics AND final state) to the gathered path, to the single
+    engine, and to itself on every mesh shape, on both drivers."""
+    _run("""
+    import jax
+    import numpy as np
+    from repro.exec import ShardedSweepRunner
+    from repro.sim import SweepRunner, get_scenario
+
+    sc = get_scenario("scale_u256").replace(
+        total_IT=2, n_train=512, n_test=128, K=8, K_ps=8)
+
+    def bitwise(a, b, tag):
+        assert a.acc == b.acc, (tag, a.acc, b.acc)
+        assert a.loss == b.loss, tag
+        assert a.edge_power == b.edge_power, tag
+        assert a.is_power == b.is_power, tag
+        eq = jax.tree.map(
+            lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()),
+            a.final_state, b.final_state)
+        assert jax.tree.all(eq), (tag, eq)
+
+    single = SweepRunner([sc], seeds=[0, 1], batch="map",
+                         keep_state=True).run_scenario(sc)
+    gathered = ShardedSweepRunner([sc], seeds=[0, 1], mesh="2x4",
+                                  keep_state=True).run_scenario(sc)
+    for mesh, driver in (("1x1", "stepwise"), ("2x4", "stepwise"),
+                         ("8x1", "chunked")):
+        u = ShardedSweepRunner([sc], seeds=[0, 1], mesh=mesh,
+                               driver=driver, keep_state=True,
+                               combine="u_sharded").run_scenario(sc)
+        bitwise(u, single, ("single", mesh, driver))
+        bitwise(u, gathered, ("gathered", mesh, driver))
+        assert u.exec_info["combine"] == "u_sharded"
+
+    # the memory contract, on the tier it is FOR: at scale_u16384
+    # (M = 1024) the u_sharded per-device peak symbol bytes fall 4x
+    # under the gathered full block.  (At this test's M = 64 the
+    # K-resolved partial accumulators legitimately dominate the tiny
+    # symbol tile — the partial combine is a large-M lever, which is
+    # why scale_u65536 is registered u_sharded-only.)  Sized from the
+    # recorded estimate, no 16384-user sweep needed.
+    sc16 = get_scenario("scale_u16384")
+    topo16 = sc16.make_topology()
+    g8 = ShardedSweepRunner([sc16], seeds=[0], mesh="8x1")
+    u8 = ShardedSweepRunner([sc16], seeds=[0], mesh="8x1",
+                            combine="u_sharded")
+    gb = g8._exec_info(topo16, two_n=7850)["peak_symbol_bytes"]
+    ub = u8._exec_info(topo16, two_n=7850)["peak_symbol_bytes"]
+    assert gb >= 4 * ub, (gb, ub)
+    print("OK")
+    """)
+
+
+def test_u_sharded_combine_padded_mesh_and_participation():
+    """u_sharded on a mesh that does not divide (C, M) — padded
+    clusters' trailing partial blocks are dropped before the fold —
+    and under a Bernoulli participation mask, both bitwise equal to
+    the gathered path and the single engine."""
+    _run("""
+    import jax
+    import numpy as np
+    from repro.exec import ShardedSweepRunner
+    from repro.sim import SweepRunner, get_scenario
+
+    base = get_scenario("scale_u256").replace(
+        total_IT=2, n_train=512, n_test=128, K=8, K_ps=8)
+    part = base.replace(participation="bernoulli",
+                        participation_rate=0.75)
+    for sc in (base, part):
+        single = SweepRunner([sc], seeds=[0], batch="map",
+                             keep_state=True).run_scenario(sc)
+        for mesh in ("3x2", "2x4"):
+            u = ShardedSweepRunner([sc], seeds=[0], mesh=mesh,
+                                   keep_state=True,
+                                   combine="u_sharded").run_scenario(sc)
+            assert u.acc == single.acc, (sc.name, mesh)
+            assert u.edge_power == single.edge_power, (sc.name, mesh)
+            assert u.is_power == single.is_power, (sc.name, mesh)
+            eq = jax.tree.map(
+                lambda x, y: bool(
+                    (np.asarray(x) == np.asarray(y)).all()),
+                single.final_state, u.final_state)
+            assert jax.tree.all(eq), (sc.name, mesh, eq)
+    print("OK")
+    """)
+
+
+def test_combine_validation():
+    from repro.exec import ShardedSweepRunner, make_runner
+    from repro.sim import get_scenario
+    sc = get_scenario("scale_u256")
+    with pytest.raises(ValueError, match="unknown combine"):
+        ShardedSweepRunner([sc], combine="psum")
+    with pytest.raises(ValueError, match="requires the sharded engine"):
+        make_runner("single", [sc], combine="u_sharded")
+    r = make_runner("sharded", [sc], mesh="1x1", combine="u_sharded")
+    assert r.combine == "u_sharded"
+    assert r._exec_info()["combine"] == "u_sharded"
 
 
 def test_nonfused_backends_and_conventional_mesh_invariant():

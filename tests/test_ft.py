@@ -302,6 +302,35 @@ def test_runner_validates_ft_kwargs():
         SweepRunner([sc], guard="sometimes")
 
 
+def test_cli_rejects_orphan_checkpoint_knobs(tmp_path):
+    """Regression: `--ckpt-every N` without `--checkpoint` used to be
+    silently ignored — the user believes checkpoints are being cut and
+    none are.  All three orphan/degenerate knob combinations must exit
+    with an argparse usage error (exit 2) before any work runs."""
+    from repro.sim.sweep import main
+    for args in (["--ckpt-every", "2"],
+                 ["--resume"],
+                 ["--ckpt-every", "0", "--checkpoint", "ck"]):
+        with pytest.raises(SystemExit) as e:
+            main(["--scenarios", "fig2_iid", "--quick"] + args)
+        assert e.value.code == 2, args
+
+
+def test_cli_trace_closes_on_midsweep_failure(tmp_path):
+    """Regression: a sweep that dies after the TraceWriter opened used
+    to leak the journal without a `run_end` — the try/finally must
+    close it so the partial journal stays machine-readable
+    (`validate_trace --allow-truncated-tail` semantics: balanced or
+    truncated scenarios, but a terminated run)."""
+    from repro.sim.sweep import main
+    path = str(tmp_path / "t.jsonl")
+    with pytest.raises(SystemExit):
+        main(["--scenarios", "no_such_scenario", "--trace", path])
+    lines = [json.loads(ln) for ln in open(path).read().splitlines()]
+    assert lines, "journal was never written"
+    assert lines[-1]["event"] == "run_end", lines[-1]
+
+
 # ---------------------------------------------------------------------------
 # the real thing: injected hard crash in a subprocess, then --resume
 # ---------------------------------------------------------------------------

@@ -10,8 +10,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import (assert_draw_invariance, fused_channels, fused_mac,
-                           fused_mac_ref)
+from repro.kernels import (assert_draw_invariance, canonical_block_u,
+                           fused_channels, fused_mac, fused_mac_partials,
+                           fused_mac_ref, fused_noise, fused_partials_reduce)
 
 SEED = jnp.asarray([0xC0FFEE, 42], jnp.uint32)
 
@@ -118,6 +119,69 @@ def test_fused_mac_bases_equal_tile_of_full_call():
     scale = float(jnp.abs(jax.lax.complex(r_re, r_im)).max()) + 1e-12
     assert float(jnp.abs(y2_re - r_re).max()) / scale < 1e-4
     assert float(jnp.abs(y2_im - r_im).max()) / scale < 1e-4
+
+
+def test_canonical_block_u():
+    """Divides M always; halves down only above the cap."""
+    for m in (1, 5, 64, 1024, 4096, 3000):
+        assert m % canonical_block_u(m) == 0
+    assert canonical_block_u(64) == 64
+    assert canonical_block_u(4096) == 1024
+    assert canonical_block_u(3000) == 750
+    assert canonical_block_u(4096, cap=512) == 512
+
+
+@pytest.mark.parametrize("U,K,n_tiles,N", [
+    (32, 8, 2, 256),     # aligned, 2 u-tiles
+    (60, 12, 4, 130),    # padded K (12 -> 16), unaligned N, 4 u-tiles
+    (8, 100, 2, 96),     # heavily padded K (100 -> 104)
+])
+def test_partials_pinned_fold_bitwise_equals_full_call(U, K, n_tiles, N):
+    """The tentpole's kernel contract: per-u-tile partial accumulators
+    (`fused_mac_partials` with each tile's `u_base`), concatenated in
+    pinned global block order and folded with the separately-drawn
+    noise (`fused_noise` over the padded Kp), are BITWISE the full-U
+    `fused_mac` output.  The fold must run in the same jitted program
+    as the partials — XLA:CPU's finalize contraction is
+    context-sensitive (see `fused_partials_reduce`) — which is exactly
+    the structure the u-sharded executor has."""
+    rng = np.random.default_rng(U + K + N)
+    B = 3
+    t_re, t_im, amp, w = _mk(rng, B, U, N)
+    bu = U // n_tiles
+    bk = 8
+    Kp = -(-K // bk) * bk
+    kw = dict(K=K, sigma_h2=1.0, sigma_z2=2.0)
+
+    @jax.jit
+    def folded():
+        parts = []
+        for j in range(n_tiles):
+            u0 = j * bu
+            parts.append(fused_mac_partials(
+                SEED, t_re[u0:u0 + bu], t_im[u0:u0 + bu],
+                amp[:, u0:u0 + bu], w[:, u0:u0 + bu], K=K, sigma_h2=1.0,
+                u_base=u0, block_u=bu, interpret=True))
+        pr_re, pr_im, pm_re, pm_im = (
+            jnp.concatenate([p[i] for p in parts], axis=1)
+            for i in range(4))
+        z_re, z_im = fused_noise(SEED, B, Kp, N, 2.0)
+        return fused_partials_reduce(pr_re, pr_im, pm_re, pm_im,
+                                     z_re, z_im, K=K)
+
+    y_re, y_im = fused_mac(SEED, t_re, t_im, amp, w, block_u=bu,
+                           interpret=True, **kw)
+    f_re, f_im = folded()
+    np.testing.assert_array_equal(np.asarray(f_re), np.asarray(y_re))
+    np.testing.assert_array_equal(np.asarray(f_im), np.asarray(y_im))
+
+
+def test_partials_require_aligned_u():
+    rng = np.random.default_rng(0)
+    t_re, t_im, amp, w = _mk(rng, 1, 12, 64)
+    with pytest.raises(ValueError, match="divisible"):
+        fused_mac_partials(SEED, t_re, t_im, amp, w, K=4, sigma_h2=1.0,
+                           block_u=8, interpret=True)
 
 
 def test_rx_stations_draw_independent_channels():

@@ -251,6 +251,36 @@ def test_ulp_distance():
     assert int(obs_diff.ulp_distance(tiny, -tiny)) == 2
 
 
+def test_ulp_distance_f64_path():
+    """Regression: a float64 pair differing below f32 precision used to
+    collapse to ULP 0 under an unconditional f32 cast — the f64 path
+    (int64 view, same sign-magnitude ordering) must report it nonzero,
+    while pairs of exactly-f32-representable values keep their f32 ULP
+    count (the CI residue gates rely on --max-ulp 1 meaning 1 f32 ULP
+    there)."""
+    # sub-f32-ULP f64 pair: nonzero, and exact on the f64 grid
+    a, b = 1.0, 1.0 + 2.0 ** -40
+    assert int(obs_diff.ulp_distance(a, b)) == 2 ** 12
+    assert int(obs_diff.ulp_distance(1.0, np.nextafter(1.0, 2.0))) == 1
+    # f32-exact values stay on the f32 grid: adjacent f32s are 1 ULP,
+    # not the ~2^29 f64 ULPs an unconditional f64 view would report
+    x = float(np.float32(0.5))
+    y = float(np.nextafter(np.float32(0.5), np.float32(1)))
+    assert int(obs_diff.ulp_distance(x, y)) == 1
+    # mixed lists select the grid elementwise
+    d = obs_diff.ulp_distance([x, 1.0], [y, 1.0 + 2.0 ** -40])
+    assert d.tolist() == [1, 2 ** 12]
+    # f64 specials keep the f32 path's conventions
+    assert int(obs_diff.ulp_distance(1e-300, 1e-300)) == 0
+    assert int(obs_diff.ulp_distance(float("nan"),
+                                     float("nan"))) == 0
+    assert int(obs_diff.ulp_distance(0.0, -0.0)) == 0
+    assert int(obs_diff.ulp_distance(1e308, -1e308)) > 0  # no overflow
+    # and the gate end-to-end: the sub-ULP pair fails --max-ulp 0
+    res = obs_diff.diff_trees({"p": a}, {"p": b})
+    assert res.max_ulp > 0 and not res.verdict(0)
+
+
 def _doc(loss=0.5, seconds=1.0, extra=None):
     d = {"schema": "x/v1", "quick": True,
          "scenarios": [{"scenario": {"name": "sc", "tau": 2},
